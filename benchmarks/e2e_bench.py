@@ -1,0 +1,84 @@
+"""End-to-end benches on reduced configs: train step + decode throughput,
+bf16 vs w8a8 (paper technique), plus the roofline summary from the dry-run
+artifacts when present."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params, init_states, forward
+from repro.quant import ptq_quantize_params
+from repro.serve.engine import decode_step
+from repro.train import AdamWConfig, TrainConfig, make_train_step
+from repro.train.optimizer import init_opt_state
+
+
+def _train_bench(arch: str) -> tuple:
+    cfg = get_config(arch, reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, TrainConfig(optimizer=AdamWConfig())))
+    batch = {
+        "tokens": jnp.zeros((4, 64), jnp.int32),
+        "labels": jnp.zeros((4, 64), jnp.int32),
+    }
+    opt = init_opt_state(params)
+    params, opt, _, m = step(params, opt, None, batch)  # compile
+    t0 = time.time()
+    for _ in range(3):
+        params, opt, _, m = step(params, opt, None, batch)
+    jax.block_until_ready(m["loss"])
+    us = (time.time() - t0) / 3 * 1e6
+    return (f"e2e/train_step_{arch}-reduced", us, "batch=4x64")
+
+
+def _decode_bench(arch: str, precision: str) -> tuple:
+    cfg = get_config(arch, precision=precision, reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if precision == "w8a8":
+        params = ptq_quantize_params(params)
+    b = 8
+    states = init_states(cfg, b, 128, int8_kv=(precision == "w8a8"))
+    tok = jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.zeros((b, 1), jnp.int32)
+    fn = jax.jit(lambda p, t, ps, st: decode_step(p, cfg, t, ps, st))
+    _, states = fn(params, tok, pos, states)  # compile
+    t0 = time.time()
+    for i in range(5):
+        lg, states = fn(params, tok, pos + i + 1, states)
+    jax.block_until_ready(lg)
+    us = (time.time() - t0) / 5 * 1e6
+    return (f"e2e/decode_{arch}-reduced_{precision}", us, f"lanes={b}")
+
+
+def run() -> list[tuple]:
+    rows = [
+        _train_bench("codeqwen1.5-7b"),
+        _train_bench("mixtral-8x7b"),
+        _decode_bench("codeqwen1.5-7b", "bf16"),
+        _decode_bench("codeqwen1.5-7b", "w8a8"),
+    ]
+    # roofline summary (if the dry-run artifacts exist)
+    rdir = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun", "16x16")
+    cells = sorted(glob.glob(os.path.join(rdir, "*.json")))
+    if cells:
+        worst = None
+        for path in cells:
+            with open(path) as f:
+                rec = json.load(f)
+            t_c = rec["hlo"]["flops_per_device"] / 197e12
+            t_m = rec["hlo"].get("mem_bytes_per_device", 0) / 819e9
+            t_n = rec["hlo"]["collective_bytes_per_device"] / 50e9
+            frac = t_c / max(t_c, t_m, t_n) if max(t_c, t_m, t_n) else 0
+            rows.append((f"roofline/{rec['arch']}__{rec['shape']}", 0.0,
+                         f"frac={frac:.3f};bound="
+                         + max((("compute", t_c), ("memory", t_m),
+                                ("collective", t_n)), key=lambda kv: kv[1])[0]))
+    return rows

@@ -1,0 +1,56 @@
+"""Pallas-kernel micro-benchmarks (interpret-mode timing is NOT hardware
+performance — the derived column reports work sizes for the roofline; TPU
+wall-times come from the dry-run analysis instead)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import inumerics as inum
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> list[tuple]:
+    ops.set_backend("jnp")  # XLA reference path (kernel-exact semantics)
+    rng = np.random.default_rng(0)
+    rows = []
+
+    x = jnp.asarray(rng.integers(-127, 128, (256, 512)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 128, (512, 512)), jnp.int8)
+    us = _time(ops.gemm_i8, x, w)
+    rows.append(("kernel/int8_gemm_256x512x512", us,
+                 f"macs={256*512*512}"))
+
+    xs = jnp.asarray(rng.integers(-127, 128, (64, 1024)), jnp.int32)
+    us = _time(lambda a: ops.softmax_i8(a, 0.05), xs)
+    rows.append(("kernel/int_softmax_64x1024", us, "elems=65536"))
+
+    xl = jnp.asarray(rng.integers(-127, 128, (64, 2048)), jnp.int32)
+    g = jnp.asarray(rng.integers(32, 127, (2048,)), jnp.int32)
+    b = jnp.zeros((2048,), jnp.int32)
+    us = _time(lambda a: ops.layernorm_i8(a, g, b), xl)
+    rows.append(("kernel/int_layernorm_64x2048", us, "elems=131072"))
+
+    us = _time(lambda a: ops.gelu_i8(a, 0.05), xl)
+    rows.append(("kernel/int_gelu_64x2048", us, "elems=131072"))
+
+    q = jnp.asarray(rng.normal(size=(2, 8, 512, 64)), jnp.float32)
+    us = _time(lambda a: ops.attention(a, a, a, causal=True), q)
+    rows.append(("kernel/flash_attention_512", us, f"flops={2*2*8*512*512*64*2}"))
+
+    qi = jnp.asarray(rng.integers(-127, 128, (1, 4, 256, 64)), jnp.int8)
+    us = _time(lambda a: ops.attention_i8(a, a, a, scale=0.002), qi)
+    rows.append(("kernel/int8_attention_256", us, "int8 QK+softmax+PV"))
+    return rows

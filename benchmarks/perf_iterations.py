@@ -1,0 +1,86 @@
+"""§Perf driver: re-runs the three focus cells (+variants) and emits the
+baseline-vs-optimized comparison table from the dry-run artifact dirs.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations --table   # md table
+  PYTHONPATH=src python -m benchmarks.perf_iterations --cells   # re-measure
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+HBM, ICI, PEAK = 819e9, 50e9, 197e12
+
+
+def _load(d):
+    out = {}
+    for p in glob.glob(os.path.join(ROOT, d, "16x16", "*.json")):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("precision", "bf16") != "bf16":
+            continue
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def table() -> None:
+    base = _load("dryrun_baseline")
+    opt = _load("dryrun")
+    print("| arch | shape | coll s (base→opt) | mem s (base→opt) | "
+          "peak GiB (base→opt) | roofline% (base→opt) |")
+    print("|---|---|---|---|---|---|")
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+
+        def terms(r):
+            c = r["hlo"]["flops_per_device"] / PEAK
+            m = r["hlo"].get("mem_bytes_per_device", 0) / HBM
+            n = r["hlo"]["collective_bytes_per_device"] / ICI
+            frac = c / max(c, m, n) if max(c, m, n) else 0.0
+            return c, m, n, frac, r["memory"]["peak_bytes_per_device"] / 2 ** 30
+
+        cb, mb, nb, fb, gb = terms(b)
+        co, mo, no, fo, go = terms(o)
+        print(f"| {key[0]} | {key[1]} | {nb:.3f} → {no:.3f} | "
+              f"{mb:.3f} → {mo:.3f} | {gb:.1f} → {go:.1f} | "
+              f"{100*fb:.1f}% → {100*fo:.1f}% |")
+
+
+def cells() -> None:
+    # import here: sets the 512-device flag
+    from repro.launch.dryrun import run_cell
+    focus = [
+        ("internlm2-20b", "train_4k", {}, "optimized"),
+        ("whisper-small", "prefill_32k", {}, "optimized"),
+        ("codeqwen1.5-7b", "decode_32k", {}, "bf16 serving"),
+        ("codeqwen1.5-7b", "decode_32k", {"int8_kv": True}, "int8-KV"),
+        ("codeqwen1.5-7b", "decode_32k",
+         {"int8_kv": True, "precision": "w8a8"}, "w8a8+int8-KV (paper)"),
+    ]
+    for arch, shape, kw, label in focus:
+        rec = run_cell(arch, shape, multi_pod=False, save=False, **kw)
+        h = rec["hlo"]
+        print(f"{arch} x {shape} [{label}]: "
+              f"compute {h['flops_per_device']/PEAK:.4f}s "
+              f"mem {h.get('mem_bytes_per_device',0)/HBM:.4f}s "
+              f"coll {h['collective_bytes_per_device']/ICI:.4f}s "
+              f"peak {rec['memory']['peak_bytes_per_device']/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", action="store_true")
+    ap.add_argument("--cells", action="store_true")
+    a = ap.parse_args()
+    if a.cells:
+        cells()
+    else:
+        table()

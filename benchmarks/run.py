@@ -1,0 +1,31 @@
+"""Benchmark driver: one function per paper table + kernel/e2e benches.
+
+Prints ``name,us_per_call,derived`` CSV (and human tables to the sections
+above).  Usage: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import cgra_tables, e2e_bench, kernel_bench
+
+    rows = []
+    rows += cgra_tables.table_vi()
+    rows += cgra_tables.table_v()
+    rows += cgra_tables.table_ii()
+    rows += cgra_tables.table_iii_iv()
+    rows += kernel_bench.run()
+    rows += e2e_bench.run()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

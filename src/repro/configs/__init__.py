@@ -1,0 +1,63 @@
+"""Config registry: --arch <id> -> ArchConfig.
+
+The 10 assigned architectures (each with its own input-shape set) plus the
+paper's own edge-model benchmark suite (``edge_models``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from ..models.config import ArchConfig
+
+ARCH_IDS = [
+    "xlstm-350m",
+    "codeqwen1.5-7b",
+    "internlm2-20b",
+    "yi-34b",
+    "starcoder2-3b",
+    "zamba2-2.7b",
+    "llama-3.2-vision-90b",
+    "whisper-small",
+    "mixtral-8x7b",
+    "qwen2-moe-a2.7b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, precision: str = "bf16",
+               reduced: bool = False) -> ArchConfig:
+    if arch_id.endswith("-reduced"):
+        arch_id, reduced = arch_id[: -len("-reduced")], True
+    mod = importlib.import_module(f".{_module_name(arch_id)}", __package__)
+    cfg: ArchConfig = mod.CONFIG
+    if reduced:
+        cfg = cfg.reduced()
+    if precision != cfg.precision:
+        cfg = dataclasses.replace(cfg, precision=precision)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to the LM-family archs (seq_len x global_batch).
+# decode_* / long_* lower serve_step (one token against a seq_len KV cache).
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def cells(arch_id: str) -> list[str]:
+    """Shape cells that apply to an arch (long_500k needs sub-quadratic)."""
+    cfg = get_config(arch_id)
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,29 @@
+"""whisper-small [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+12L d_model=768 12H (kv=12) d_ff=3072 vocab=51865.  12 encoder layers
+(bidirectional) + 12 decoder layers (self + cross attention).  The conv
+frontend is a STUB: ``input_specs()`` provides precomputed frame embeddings
+(B, 1500, d).  Positional scheme: learned pos-embed on the encoder (as in
+the paper); the decoder uses RoPE instead of learned embeddings — an
+adaptation noted in DESIGN.md.
+"""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    block_pattern=("dec",),
+    is_encoder_decoder=True,
+    n_encoder_layers=12,
+    n_audio_frames=1500,
+    rope_theta=1e4,
+    activation="gelu",
+    norm_type="layernorm",
+    tie_embeddings=True,
+)

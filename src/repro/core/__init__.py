@@ -1,0 +1,13 @@
+"""NX-CGRA core: the paper's contribution.
+
+- ``inumerics``: integer-only transformer math (shared arithmetic contract)
+- ``isa`` / ``program`` / ``scheduler`` / ``simulator``: the programmable
+  fabric model (16 PE + 8 MOB, static VLIW microcode, torus NoC)
+- ``kernel_library``: the six Table-II benchmark kernels as task graphs
+- ``costmodel``: gate-level-calibrated metrics (Tables V/VI)
+"""
+from . import inumerics  # noqa: F401
+from .costmodel import KernelMetrics, metrics_from_sim, area_table, PAPER_TABLE_VI  # noqa: F401
+from .kernel_library import BUILDERS  # noqa: F401
+from .scheduler import StaticScheduler, Task  # noqa: F401
+from .simulator import Simulator, SimResult  # noqa: F401

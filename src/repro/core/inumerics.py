@@ -1,0 +1,350 @@
+"""Integer-only transformer numerics (the NX-CGRA arithmetic contract).
+
+NX-CGRA executes every transformer kernel — linear *and* non-linear — in
+int8/int16/int32 arithmetic only (paper §III-B: "multi-precision integer-only
+modules").  This module is the single source of truth for those semantics:
+
+  * the CGRA functional simulator executes these exact formulas macro-op by
+    macro-op (``core/simulator.py``),
+  * the Pallas TPU kernels compute them blockwise (``kernels/*``),
+  * the ``ref.py`` oracles call them directly,
+  * the quantized model path (``models/``, ``quant/``) uses them end-to-end.
+
+The algorithms follow the I-BERT / ITA lineage (integer exp via 2^x
+decomposition + 2nd-order polynomial, integer erf polynomial, integer Newton
+sqrt), restricted to what the NX-CGRA PE datapath can express:
+
+  * 32-bit signed add/sub/mul(low)/div, shifts, compares,
+  * 16-bit unsigned multiply  -> requantization uses shift-then-16-bit-multiply
+    (a 32x32->64 product does NOT exist on this PE, so we never rely on one),
+  * 8-bit 4x fused MAC        -> int8 matmuls accumulate in int32.
+
+Everything here is pure jnp on int32 and is jit/vmap/shard-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+I8 = jnp.int8
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (symmetric, power-of-two-free scales)
+# ---------------------------------------------------------------------------
+
+
+def quantize(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
+    """Symmetric quantization: q = clip(round(x / scale))."""
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -qmax - 1, qmax).astype(I32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def absmax_scale(x: jax.Array, bits: int = 8, axis=None) -> jax.Array:
+    """Calibration: scale = absmax / qmax (per-tensor or per-axis)."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+# ---------------------------------------------------------------------------
+# Requantization: int32 accumulator -> int8, using shift + 16-bit multiply.
+#
+# The NX-CGRA PE has no widening 32x32 multiply, so the canonical
+# gemmlowp-style (acc * M) >> 31 with M ~ 2^31 is not expressible.  Faithful
+# alternative (and what the paper's `quant` kernel does with its "upper bound
+# for the operator choice", §IV-A-1): pre-shift the accumulator into 16 bits,
+# multiply by a 14-bit integer multiplier, post-shift.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RequantParams:
+    """out = clip( ((acc >>r s1) * mult) >>r s2 ), >>r = round-half-up shift."""
+
+    s1: int
+    mult: int
+    s2: int
+
+    @property
+    def effective_scale(self) -> float:
+        return self.mult / (1 << (self.s1 + self.s2))
+
+
+def compute_requant_params(multiplier: float, acc_bound: int) -> RequantParams:
+    """Derive (s1, mult, s2) such that mult/2^(s1+s2) ~= multiplier.
+
+    ``acc_bound`` is the static worst-case |accumulator| (e.g. K*127*127 for a
+    depth-K int8 dot product); s1 is chosen so the shifted accumulator fits in
+    int16 and the 16-bit multiply cannot overflow int32.
+    """
+    if multiplier <= 0:
+        raise ValueError("requant multiplier must be positive")
+    # total shift st with mult in [2^13, 2^14)
+    st = 13 - math.floor(math.log2(multiplier))
+    mult = int(round(multiplier * (1 << st)))
+    if mult >= 1 << 14:  # rounding pushed it up
+        mult >>= 1
+        st -= 1
+    # shifted acc must fit 16 bits signed: |acc| >> s1 <= 2^15 - 1
+    need = max(0, math.ceil(math.log2(max(acc_bound, 1))) - 15)
+    s1 = min(max(0, st), need) if need > 0 else 0
+    s1 = max(s1, need)  # never allow 16-bit overflow
+    if s1 > st:
+        # multiplier too large to absorb the pre-shift; grow mult (still < 2^15
+        # after at most 1 doubling in practice; clamp defensively).
+        mult = min(mult << (s1 - st), (1 << 15) - 1)
+        st = s1
+    s2 = st - s1
+    return RequantParams(s1=s1, mult=mult, s2=s2)
+
+
+def rshift_round(x: jax.Array, s) -> jax.Array:
+    """Arithmetic right shift with round-half-up; s == 0 is the identity."""
+    x = x.astype(I32)
+    s_arr = jnp.asarray(s, I32)
+    add = jnp.where(s_arr > 0, (1 << jnp.maximum(s_arr - 1, 0)).astype(I32), 0)
+    return jnp.where(s_arr > 0, (x + add) >> s_arr, x)
+
+
+def requantize(acc: jax.Array, p: RequantParams, bits: int = 8) -> jax.Array:
+    """int32 accumulator -> int``bits`` value (returned as int32 payload)."""
+    qmax = 2 ** (bits - 1) - 1
+    t = rshift_round(acc.astype(I32), p.s1)
+    t = jnp.clip(t, -(1 << 15), (1 << 15) - 1)  # 16-bit operand invariant
+    t = t * jnp.asarray(p.mult, I32)  # |t*mult| < 2^15 * 2^14 = 2^29: exact
+    t = rshift_round(t, p.s2)
+    return jnp.clip(t, -qmax - 1, qmax)
+
+
+# ---------------------------------------------------------------------------
+# Integer exp (I-BERT):  exp(x) = 2^(-z) * poly(r),  x = r - z*ln2, r in (-ln2,0]
+# ---------------------------------------------------------------------------
+
+_EXP_A, _EXP_B, _EXP_C = 0.35815147, 1.353, 0.344
+
+
+def i_exp(q: jax.Array, scale: float) -> tuple[jax.Array, float]:
+    """Integer exp of non-positive fixed-point inputs.
+
+    ``q`` int32 with real value q*scale (q <= 0 after max-subtraction).
+    Returns (q_out, scale_out) with exp(q*scale) ~= q_out * scale_out.
+    """
+    q = q.astype(I32)
+    q_ln2 = max(int(math.floor(math.log(2.0) / scale)), 1)
+    # z = floor(-q / q_ln2): number of halvings
+    z = (-q) // q_ln2
+    q_p = q + z * q_ln2  # remainder in (-q_ln2, 0]
+    # 2nd-order polynomial a*(r + b)^2 + c evaluated in fixed point
+    q_b = int(math.floor(_EXP_B / scale))
+    q_c = int(math.floor(_EXP_C / (_EXP_A * scale * scale)))
+    s_poly = _EXP_A * scale * scale
+    q_poly = (q_p + q_b) * (q_p + q_b) + q_c
+    z = jnp.minimum(z, 30)
+    q_out = q_poly >> z
+    return q_out.astype(I32), s_poly
+
+
+# ---------------------------------------------------------------------------
+# Integer softmax (ITA-style int8 output, scale 1/127)
+# ---------------------------------------------------------------------------
+
+SOFTMAX_OUT_SCALE = 1.0 / 127.0
+
+
+def exp_rescale_shift(scale: float) -> int:
+    """Static right-shift bounding i_exp outputs to 14 bits.
+
+    The polynomial constant q_c ~ 1/(A*scale^2) explodes for fine scales
+    (attention scores): without this, e*127 overflows int32.  Softmax only
+    needs ratios, so a uniform shift is exact up to 14-bit granularity.
+    """
+    q_b = int(math.floor(_EXP_B / scale))
+    q_c = int(math.floor(_EXP_C / (_EXP_A * scale * scale)))
+    emax = q_b * q_b + q_c
+    return max(0, int(emax).bit_length() - 14)
+
+
+def i_softmax(q: jax.Array, scale: float, axis: int = -1, mask: jax.Array | None = None) -> jax.Array:
+    """Integer-only softmax.  q: int32 logits with real value q*scale.
+
+    Returns int32 payload in [0, 127]; dequantize with SOFTMAX_OUT_SCALE.
+    With ``mask`` (bool, True = keep), masked positions get probability 0.
+    """
+    q = q.astype(I32)
+    neg_inf = jnp.asarray(-(2 ** 24), I32)  # large negative, shift-safe
+    if mask is not None:
+        q = jnp.where(mask, q, neg_inf)
+    q_max = jnp.max(q, axis=axis, keepdims=True)
+    q_shift = q - q_max  # <= 0
+    q_exp, _ = i_exp(jnp.maximum(q_shift, neg_inf), scale)
+    q_exp = q_exp >> exp_rescale_shift(scale)  # bound to 14 bits
+    if mask is not None:
+        q_exp = jnp.where(mask, q_exp, 0)
+    q_sum = jnp.sum(q_exp, axis=axis, keepdims=True)
+    q_sum = jnp.maximum(q_sum, 1)
+    # out_i = round(127 * e_i / sum); e <= 2^14 so 127*e and row sums up to
+    # 2^17 keys stay in int32
+    out = (q_exp * 127 + (q_sum >> 1)) // q_sum
+    return jnp.clip(out, 0, 127).astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# Integer erf / GELU (I-BERT polynomial)
+# ---------------------------------------------------------------------------
+
+_ERF_A, _ERF_B, _ERF_C = -0.2888, -1.769, 1.0
+
+
+def i_erf(q: jax.Array, scale: float) -> tuple[jax.Array, float]:
+    """erf(q*scale) ~= q_out * s_out (sign-symmetric clipped polynomial)."""
+    q = q.astype(I32)
+    q_b = int(math.floor(_ERF_B / scale))  # negative
+    q_c = int(math.floor(_ERF_C / (_ERF_A * scale * scale)))  # negative
+    sgn = jnp.sign(q).astype(I32)
+    q_abs = jnp.minimum(jnp.abs(q), -q_b)
+    q_poly = (q_abs + q_b) * (q_abs + q_b) + q_c
+    s_out = _ERF_A * scale * scale
+    return sgn * q_poly, s_out
+
+
+def i_gelu(q: jax.Array, scale: float) -> tuple[jax.Array, float]:
+    """GELU(x) = x * 0.5 * (1 + erf(x / sqrt(2))) in integer arithmetic."""
+    q = q.astype(I32)
+    q_erf, s_erf = i_erf(q, scale / math.sqrt(2.0))
+    q_one = int(math.floor(1.0 / s_erf))  # note: s_erf < 0 -> q_one < 0
+    q_out = q * (q_erf + q_one)
+    s_out = scale * s_erf / 2.0
+    return q_out, s_out
+
+
+def i_gelu_int8(q: jax.Array, scale: float) -> tuple[jax.Array, float]:
+    """GELU with int8 (payload int32) output and positive scale."""
+    q_out, s_out = i_gelu(q, scale)
+    if s_out < 0:
+        q_out, s_out = -q_out, -s_out
+    # output real range ~ [-0.17, 127*scale]; requantize to int8.
+    # The TIGHT accumulator bound matters: |q * (q_erf + q_one)| <=
+    # 127 * 2/|s_erf| — a loose 2^30 bound forces a 15-bit pre-shift and
+    # costs ~0.7 abs error at scale 0.08.
+    out_scale = max(127.0 * scale, 1e-8) / 127.0
+    acc_bound = int(127 * 2 / abs(s_out / scale * 2.0)) + 127
+    p = compute_requant_params(s_out / out_scale, acc_bound=acc_bound)
+    return requantize(q_out, p), out_scale
+
+
+# ---------------------------------------------------------------------------
+# Integer sigmoid / SiLU (for SwiGLU archs)
+# ---------------------------------------------------------------------------
+
+
+def i_sigmoid(q: jax.Array, scale: float) -> jax.Array:
+    """sigmoid(q*scale) -> int32 payload in [0,127], scale 1/127."""
+    q = q.astype(I32)
+    q_neg = -jnp.abs(q)  # exp of non-positive value
+    q_exp, s_exp = i_exp(q_neg, scale)  # e = exp(-|x|), in (0, 1]
+    q_one = max(int(round(1.0 / s_exp)), 1)  # 1.0 in exp scale
+    denom = jnp.maximum(q_one + q_exp, 1)
+    # sig(-|x|) = e / (1 + e); sig(|x|) = 1 / (1 + e)
+    pos = ((q_one * 127) + (denom >> 1)) // denom
+    neg = ((q_exp * 127) + (denom >> 1)) // denom
+    out = jnp.where(q >= 0, pos, neg)
+    return jnp.clip(out, 0, 127).astype(I32)
+
+
+def i_silu(q: jax.Array, scale: float) -> tuple[jax.Array, float]:
+    """SiLU(x) = x * sigmoid(x); returns (int32 payload, scale_out)."""
+    q = q.astype(I32)
+    q_sig = i_sigmoid(q, scale)  # scale 1/127
+    q_out = q * q_sig  # |q| <= 2^15 assumed (int8/int16 inputs): exact
+    return q_out, scale / 127.0
+
+
+# ---------------------------------------------------------------------------
+# Integer sqrt (Newton) + LayerNorm / RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def i_sqrt(n: jax.Array, iters: int = 8) -> jax.Array:
+    """floor(sqrt(n)) for non-negative int32 n, Newton iteration."""
+    n = jnp.maximum(n.astype(I32), 0)
+    # initial guess: 2^ceil(bits/2) via bit-length approximation
+    bl = 32 - jax.lax.clz(jnp.maximum(n, 1))
+    x0 = (jnp.asarray(1, I32) << ((bl + 1) // 2)).astype(I32)
+
+    def body(_, x):
+        x = jnp.maximum(x, 1)
+        nx = (x + n // x) >> 1
+        return jnp.minimum(x, nx)  # monotone: guards oscillation at floor
+
+    x = jax.lax.fori_loop(0, iters, body, x0)
+    return jnp.where(n == 0, 0, x)
+
+
+_NORM_FRAC_BITS = 7  # fractional bits of the normalized value
+
+
+def i_layernorm(
+    q: jax.Array,
+    scale: float,
+    gamma_q: jax.Array,
+    beta_q: jax.Array,
+    gb_scale: float,
+    axis: int = -1,
+    rms_only: bool = False,
+) -> tuple[jax.Array, float]:
+    """Integer-only LayerNorm / RMSNorm.
+
+    q: int32 payload (int8-range values), real = q*scale.
+    gamma_q/beta_q: int8-range payloads with scale ``gb_scale``
+    (beta real = beta_q * gb_scale; RMSNorm passes beta=0, rms_only=True).
+
+    Returns (int32 payload, out_scale) where out ~= LN(x)*gamma + beta and
+    out_scale = gb_scale / 2^7 (normalized value held with 7 fractional bits).
+    """
+    q = q.astype(I32)
+    d = q.shape[axis]
+    if not rms_only:
+        s = jnp.sum(q, axis=axis, keepdims=True)
+        mean = jnp.where(s >= 0, (s + d // 2) // d, -((-s + d // 2) // d))
+        c = q - mean
+    else:
+        c = q
+    c = jnp.clip(c, -255, 255)  # int8-range invariant (c^2 < 2^16)
+    # adaptive pre-shift keeps sum of squares within int32 for any D
+    vshift = max(0, (d - 1).bit_length() - 15)
+    c2 = (c * c) >> vshift
+    var_sum = jnp.sum(c2, axis=axis, keepdims=True)
+    var = (var_sum // d) << vshift  # mean of squares, <= 2^16
+    # extended-precision sqrt: sqrt(var << 8) = std * 16
+    std16 = jnp.maximum(i_sqrt(var << 8), 1)
+    # normalized value with 7 fractional bits: n = c * 2^(7+4) / (std*16)
+    n = (c << (_NORM_FRAC_BITS + 4)) // std16  # |n| <= ~2^11
+    out = n * gamma_q  # |n * gamma| <= 2^18: exact in int32
+    if not rms_only:
+        out = out + (beta_q.astype(I32) << _NORM_FRAC_BITS)
+    return out, gb_scale / float(1 << _NORM_FRAC_BITS)
+
+
+# ---------------------------------------------------------------------------
+# Integer matmul (the PE 4x fused int8 MAC array in jnp form)
+# ---------------------------------------------------------------------------
+
+
+def i_matmul(a_q: jax.Array, b_q: jax.Array) -> jax.Array:
+    """int8-payload x int8-payload -> int32 accumulator (exact)."""
+    return jax.lax.dot_general(
+        a_q.astype(jnp.int8),
+        b_q.astype(jnp.int8),
+        (((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=I32,
+    )

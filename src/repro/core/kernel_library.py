@@ -1,0 +1,404 @@
+"""The paper's six benchmark kernels (Table II) as NX-CGRA task graphs.
+
+Each builder returns a ``KernelInstance`` holding (a) the phase-ordered task
+graph for the static scheduler, with scalar-ISA op counts derived from the
+``core.inumerics`` algorithms, (b) functional payloads that compute the
+bit-exact integer result, and (c) a float reference for validation.
+
+Input sizes and dtypes follow Table II exactly:
+
+  conv : Img int8 [3,128,128], Wgt int8 8x[3,3,3], Bias int32 [8]
+  gemm : A int8 [32,64], B int8 [64,32]
+  gelu : Input int8 [4,16], Weight int8 [16], Bias int32 [16]
+  norm : Input int8 [64], Gamma int8 [8], Beta int8 [8]
+  quant: Input int16 [64], Scale int32 [1]
+  sftmx: QK_BUF int8 [32], ATTN_MASK int32 [32], BIAS int32 [32,32]
+
+Notes mirroring §IV-A-1:
+  * sftmx exceeds the fabric -> split into two context phases with
+    intermediates spilled to L1 (context_phases=2).
+  * quant inputs are int16 but the PE has no 16-bit signed multiply -> the
+    32-bit operator path is used (the paper's "upper bound" choice).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import inumerics as inum
+from .isa import OpClass
+from .scheduler import Task
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class KernelInstance:
+    name: str
+    tasks: list[Task]
+    env: dict[str, Any]
+    out_key: str
+    out_scale: float
+    useful_ops: int              # numerator of the MOPS metric (documented)
+    context_phases: int = 1
+    ref_fn: Callable[[dict[str, Any]], np.ndarray] | None = None
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# gemm — A[32,64] @ B[64,32], int8 x int8 -> int32 -> requant int8
+# ---------------------------------------------------------------------------
+
+def build_gemm(seed: int = 0, m: int = 32, k: int = 64, n: int = 32) -> KernelInstance:
+    rng = _rng(seed)
+    a = rng.integers(-127, 128, size=(m, k)).astype(np.int8)
+    b = rng.integers(-127, 128, size=(k, n)).astype(np.int8)
+    s_a, s_b = 0.02, 0.02
+    s_out = s_a * s_b * k / 8.0  # heuristic output scale
+    rq = inum.compute_requant_params(s_a * s_b / s_out, acc_bound=k * 127 * 127)
+
+    env = {"a": jnp.asarray(a, jnp.int8), "b": jnp.asarray(b, jnp.int8)}
+    tasks: list[Task] = []
+    tile = 8
+    n_tiles_m, n_tiles_n = m // tile, n // tile
+
+    def make_fn(i0, j0):
+        def fn(env):
+            acc = inum.i_matmul(env["a"][i0:i0 + tile], env["b"][:, j0:j0 + tile])
+            out = env.setdefault("out", np.zeros((m, n), np.int32))
+            out[i0:i0 + tile, j0:j0 + tile] = np.asarray(inum.requantize(acc, rq))
+        return fn
+
+    addr = 0
+    for ti in range(n_tiles_m):
+        for tj in range(n_tiles_n):
+            in_bytes = tile * k + k * tile           # A-rows + B-cols (int8)
+            macs = tile * tile * k
+            tasks.append(Task(
+                name=f"gemm.t{ti}{tj}", kind="load", phase=0,
+                nbytes=in_bytes, addr=addr))
+            tasks.append(Task(
+                name=f"gemm.c{ti}{tj}", kind="compute", phase=0,
+                ops={
+                    OpClass.MAC8: macs,
+                    # per-4-MAC inner-loop control + accumulate staging
+                    OpClass.ALU32: macs // 4 + tile * tile * 3,  # + requant
+                    OpClass.MUL16: tile * tile,                   # requant mult
+                },
+                in_bytes=in_bytes, out_bytes=tile * tile,
+                fn=make_fn(ti * tile, tj * tile)))
+            tasks.append(Task(
+                name=f"gemm.s{ti}{tj}", kind="store", phase=0,
+                nbytes=tile * tile, addr=addr + 1 << 12))
+            addr += in_bytes
+
+    def ref(env):
+        return np.asarray(env["a"], np.int32) @ np.asarray(env["b"], np.int32)
+
+    return KernelInstance(
+        name="gemm", tasks=tasks, env=env, out_key="out", out_scale=s_out,
+        useful_ops=2 * m * k * n, ref_fn=ref)
+
+
+# ---------------------------------------------------------------------------
+# conv — 2D convolution, Img[3,128,128] * 8 x Wgt[3,3,3] + Bias[8]
+# ---------------------------------------------------------------------------
+
+def build_conv(seed: int = 1) -> KernelInstance:
+    rng = _rng(seed)
+    cin, h, w = 3, 128, 128
+    cout, kh, kw = 8, 3, 3
+    oh, ow = h - kh + 1, w - kw + 1
+    img = rng.integers(-127, 128, size=(cin, h, w)).astype(np.int8)
+    wgt = rng.integers(-127, 128, size=(cout, cin, kh, kw)).astype(np.int8)
+    bias = rng.integers(-(2 ** 15), 2 ** 15, size=(cout,)).astype(np.int32)
+    env = {"img": jnp.asarray(img), "wgt": jnp.asarray(wgt), "bias": jnp.asarray(bias)}
+    macs_per_px = cin * kh * kw  # 27
+    rq = inum.compute_requant_params(1e-4, acc_bound=macs_per_px * 127 * 127 + 2 ** 15)
+
+    def fn(env):
+        out = jax.lax.conv_general_dilated(
+            env["img"][None].astype(I32), jnp.transpose(env["wgt"], (2, 3, 1, 0)).astype(I32),
+            window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NCHW", "HWIO", "NCHW"),
+            preferred_element_type=I32)[0]
+        out = out + env["bias"][:, None, None]
+        env["out"] = np.asarray(inum.requantize(out, rq))
+
+    tasks: list[Task] = []
+    addr = 0
+    # one task per (filter, output-row): realistic strip-mined mapping
+    for f in range(cout):
+        for r in range(oh):
+            in_bytes = kh * w * (1 if f else cin)  # window rows; weights resident
+            tasks.append(Task(name=f"conv.l{f}.{r}", kind="load", phase=0,
+                              nbytes=in_bytes, addr=addr))
+            tasks.append(Task(
+                name=f"conv.c{f}.{r}", kind="compute", phase=0,
+                ops={
+                    # the 3-wide sliding window cannot fill the 4-lane fused
+                    # MAC: each of the 27 window MACs is its own issue
+                    OpClass.MAC8: ow * macs_per_px * 4,
+                    OpClass.ALU32: ow * 8,   # window pointer bumps + bias + requant
+                    OpClass.MUL16: ow,       # requant multiply
+                },
+                in_bytes=in_bytes, out_bytes=ow,
+                fn=fn if (f == 0 and r == 0) else None))
+            tasks.append(Task(name=f"conv.s{f}.{r}", kind="store", phase=0,
+                              nbytes=ow, addr=addr + (1 << 14)))
+            addr += in_bytes
+
+    def ref(env):
+        out = jax.lax.conv_general_dilated(
+            jnp.asarray(env["img"])[None].astype(I32),
+            jnp.transpose(jnp.asarray(env["wgt"]), (2, 3, 1, 0)).astype(I32),
+            (1, 1), "VALID", dimension_numbers=("NCHW", "HWIO", "NCHW"),
+            preferred_element_type=I32)[0]
+        return np.asarray(out + jnp.asarray(env["bias"])[:, None, None])
+
+    return KernelInstance(
+        name="conv", tasks=tasks, env=env, out_key="out", out_scale=1e-4,
+        useful_ops=2 * cout * oh * ow * macs_per_px, ref_fn=ref)
+
+
+# ---------------------------------------------------------------------------
+# gelu — fused scale+bias+GELU, Input[4,16] (x*w + b then GELU)
+# ---------------------------------------------------------------------------
+
+def build_gelu(seed: int = 2) -> KernelInstance:
+    rng = _rng(seed)
+    x = rng.integers(-127, 128, size=(4, 16)).astype(np.int8)
+    wgt = rng.integers(1, 127, size=(16,)).astype(np.int8)
+    bias = rng.integers(-(2 ** 10), 2 ** 10, size=(16,)).astype(np.int32)
+    s_x = 0.04
+    env = {"x": jnp.asarray(x), "w": jnp.asarray(wgt), "b": jnp.asarray(bias)}
+    # pre-activation scale: (x*w+b) at scale s_x/64 (w treated as fixed-point /64)
+    s_pre = s_x / 64.0
+    # requantize the int32 pre-activation to int8 before the GELU — the
+    # fabric's quant->gelu kernel chain (i_gelu operates on int8 payloads)
+    acc_bound = 127 * 127 + 2 ** 10
+    s8 = acc_bound * s_pre / 127.0
+    rq_pre = inum.compute_requant_params(s_pre / s8, acc_bound)
+
+    def fn(env):
+        pre = env["x"].astype(I32) * env["w"].astype(I32) + env["b"]
+        q8 = inum.requantize(pre, rq_pre)
+        q, s_out = inum.i_gelu_int8(q8, s8)
+        env["out"] = np.asarray(q)
+        env["out_scale"] = s_out
+
+    n_elem = 4 * 16
+    # per-element scalar ops from the i_gelu formula:
+    #   erf poly: abs,min,add,sq(mul),add,sign-mul  = 4 alu + 2 mul
+    #   gelu: add q_one, x*erf (mul), requant (shift,mul16,shift,clip)
+    # the mapper spreads the 64 elements over 8 PEs (chunks of 8)
+    tasks: list[Task] = []
+    n_chunks, chunk = 8, n_elem // 8
+    for c in range(n_chunks):
+        cb = chunk + 2 + 8  # chunk + weight/bias slice bytes
+        tasks.append(Task(name=f"gelu.l{c}", kind="load", phase=0, nbytes=cb, addr=c * 64))
+        tasks.append(Task(
+            name=f"gelu.c{c}", kind="compute", phase=0,
+            ops={
+                OpClass.ALU32: chunk * 9,
+                OpClass.MUL32: chunk * 3,
+                OpClass.MUL16: chunk * 2,
+            },
+            in_bytes=cb, out_bytes=chunk, fn=fn if c == 0 else None))
+        tasks.append(Task(name=f"gelu.s{c}", kind="store", phase=0, nbytes=chunk,
+                          addr=(1 << 13) + c * 64))
+
+    def ref(env):
+        pre = (np.asarray(env["x"], np.int32) * np.asarray(env["w"], np.int32)
+               + np.asarray(env["b"])) * s_pre
+        return np.asarray(jax.nn.gelu(jnp.asarray(pre), approximate=False))
+
+    return KernelInstance(
+        name="gelu", tasks=tasks, env=env, out_key="out", out_scale=0.0,
+        useful_ops=n_elem * 14, ref_fn=ref)
+
+
+# ---------------------------------------------------------------------------
+# norm — LayerNorm over 64 elements, grouped gamma/beta[8]
+# ---------------------------------------------------------------------------
+
+def build_norm(seed: int = 3) -> KernelInstance:
+    rng = _rng(seed)
+    d = 64
+    x = rng.integers(-127, 128, size=(d,)).astype(np.int8)
+    gamma = rng.integers(32, 127, size=(8,)).astype(np.int8)
+    beta = rng.integers(-64, 64, size=(8,)).astype(np.int8)
+    s_x, s_gb = 0.05, 1.0 / 64.0
+    env = {"x": jnp.asarray(x), "gamma": jnp.asarray(gamma), "beta": jnp.asarray(beta)}
+
+    def fn(env):
+        g = jnp.repeat(env["gamma"].astype(I32), d // 8)
+        b = jnp.repeat(env["beta"].astype(I32), d // 8)
+        q, s_out = inum.i_layernorm(env["x"].astype(I32), s_x, g, b, s_gb)
+        env["out"] = np.asarray(q)
+        env["out_scale"] = s_out
+
+    # three schedule phases: parallel partial sums -> combine + Newton sqrt
+    # (serial, div-latency bound) -> parallel normalize (one div per element).
+    # Explains the paper's 70 MOPS for norm vs 3040 for gemm.
+    tasks: list[Task] = []
+    n_par, chunk = 4, d // 4
+    for c in range(n_par):
+        tasks.append(Task(name=f"norm.l{c}", kind="load", phase=0,
+                          nbytes=chunk + 4, addr=c * 64))
+        tasks.append(Task(
+            name=f"norm.red{c}", kind="compute", phase=0,
+            ops={OpClass.ALU32: chunk * 3, OpClass.MUL32: chunk},  # sum, sumsq
+            in_bytes=chunk + 4, out_bytes=8))
+    tasks.append(Task(
+        name="norm.sqrt", kind="compute", phase=1,
+        ops={OpClass.ALU32: 40, OpClass.DIV32: 10},  # combine + Newton isqrt
+        in_bytes=8 * n_par, out_bytes=8, fn=fn))
+    for c in range(n_par):
+        tasks.append(Task(
+            name=f"norm.nrm{c}", kind="compute", phase=2,
+            ops={
+                OpClass.ALU32: chunk * 2,
+                OpClass.DIV32: chunk,        # per-element /std
+                OpClass.MUL16: chunk,        # gamma multiply
+            },
+            in_bytes=chunk + 8, out_bytes=chunk * 2))
+        tasks.append(Task(name=f"norm.s{c}", kind="store", phase=2,
+                          nbytes=chunk * 2, addr=(1 << 13) + c * 64))
+
+    def ref(env):
+        xf = np.asarray(env["x"], np.float32) * s_x
+        mu, sd = xf.mean(), xf.std() + 1e-6
+        g = np.repeat(np.asarray(env["gamma"], np.float32) * s_gb, d // 8)
+        b = np.repeat(np.asarray(env["beta"], np.float32) * s_gb, d // 8)
+        return (xf - mu) / sd * g + b
+
+    return KernelInstance(
+        name="norm", tasks=tasks, env=env, out_key="out", out_scale=s_gb / 128,
+        useful_ops=d * 7, ref_fn=ref)
+
+
+# ---------------------------------------------------------------------------
+# quant — requantize int16 -> int8 with int32 scale (32-bit operator path)
+# ---------------------------------------------------------------------------
+
+def build_quant(seed: int = 4) -> KernelInstance:
+    rng = _rng(seed)
+    d = 64
+    x = rng.integers(-(2 ** 15), 2 ** 15, size=(d,)).astype(np.int16)
+    env = {"x": jnp.asarray(x.astype(np.int32))}
+    rq = inum.compute_requant_params(127.0 / 2 ** 15, acc_bound=2 ** 15)
+
+    def fn(env):
+        env["out"] = np.asarray(inum.requantize(env["x"], rq))
+
+    # mapped onto 2 PEs (tiny kernel; matches the paper's low quant MOPS)
+    tasks: list[Task] = []
+    for c in range(2):
+        h = d // 2
+        tasks.append(Task(name=f"quant.l{c}", kind="load", phase=0,
+                          nbytes=h * 2 + 4, addr=c * 128))
+        tasks.append(Task(
+            name=f"quant.c{c}", kind="compute", phase=0,
+            # int16 data on the 32-bit path (paper §IV-A-1): shift, clip x2,
+            # 16-bit multiply, shift, pack
+            ops={OpClass.ALU32: h * 5, OpClass.MUL16: h},
+            in_bytes=h * 2 + 4, out_bytes=h, fn=fn if c == 0 else None))
+        tasks.append(Task(name=f"quant.s{c}", kind="store", phase=0, nbytes=h,
+                          addr=(1 << 13) + c * 64))
+
+    def ref(env):
+        return np.clip(np.round(np.asarray(env["x"]) * (127.0 / 2 ** 15)), -128, 127)
+
+    return KernelInstance(
+        name="quant", tasks=tasks, env=env, out_key="out", out_scale=2 ** 15 / 127.0 / 2 ** 15,
+        useful_ops=d * 4, ref_fn=ref)
+
+
+# ---------------------------------------------------------------------------
+# sftmx — masked softmax over 32x32 scores (two context phases, §IV-A-1)
+# ---------------------------------------------------------------------------
+
+def build_sftmx(seed: int = 5) -> KernelInstance:
+    rng = _rng(seed)
+    rows, cols = 32, 32
+    scores = rng.integers(-127, 128, size=(rows, cols)).astype(np.int8)
+    mask = (rng.random((rows, cols)) > 0.1)
+    s_x = 0.08
+    env = {"scores": jnp.asarray(scores), "mask": jnp.asarray(mask)}
+
+    def fn_phase1(env):
+        q = env["scores"].astype(I32)
+        q = jnp.where(env["mask"], q, -(2 ** 24))
+        q_max = jnp.max(q, axis=-1, keepdims=True)
+        q_exp, s_exp = inum.i_exp(q - q_max, s_x)
+        q_exp = jnp.where(env["mask"], q_exp, 0)
+        env["_exp"] = q_exp  # intermediate spilled to L1 (context switch)
+
+    def fn_phase2(env):
+        q_exp = env["_exp"]
+        q_sum = jnp.maximum(jnp.sum(q_exp, axis=-1, keepdims=True), 1)
+        out = jnp.clip((q_exp * 127 + (q_sum >> 1)) // q_sum, 0, 127)
+        env["out"] = np.asarray(out)
+
+    n = rows * cols
+    # row-parallel mapping: 2 rows per PE, both phases (the paper splits this
+    # kernel across two contexts because it exceeds the fabric, §IV-A-1)
+    tasks: list[Task] = []
+    rows_per_task = 2
+    for c in range(rows // rows_per_task):
+        rn = rows_per_task * cols           # elements in this slice
+        ib = rn + 4 * rn                    # scores int8 + mask int32
+        tasks.append(Task(name=f"sftmx.l0.{c}", kind="load", phase=0,
+                          nbytes=ib, addr=c * 256))
+        tasks.append(Task(
+            name=f"sftmx.exp{c}", kind="compute", phase=0,
+            ops={
+                OpClass.ALU32: rn * 6 + rows_per_task * (cols - 1),  # mask,max,shift-exp
+                OpClass.MUL32: rn,                                    # poly square
+            },
+            in_bytes=ib, out_bytes=4 * rn, fn=fn_phase1 if c == 0 else None))
+        tasks.append(Task(name=f"sftmx.sp{c}", kind="store", phase=0,
+                          nbytes=4 * rn, addr=(1 << 14) + c * 256))
+        # phase 1 runs in a fresh context: reload intermediates, reduce, divide
+        tasks.append(Task(name=f"sftmx.l1.{c}", kind="load", phase=1,
+                          nbytes=4 * rn, addr=(1 << 14) + c * 256))
+        tasks.append(Task(
+            name=f"sftmx.div{c}", kind="compute", phase=1,
+            ops={
+                OpClass.ALU32: rn * 2 + rows_per_task * (cols - 1),  # sums + rounding
+                OpClass.DIV32: rn,                                    # normalize
+            },
+            in_bytes=4 * rn, out_bytes=rn, fn=fn_phase2 if c == 0 else None))
+        tasks.append(Task(name=f"sftmx.s{c}", kind="store", phase=1,
+                          nbytes=rn, addr=(1 << 15) + c * 64))
+
+    def ref(env):
+        xf = np.asarray(env["scores"], np.float32) * s_x
+        xf = np.where(np.asarray(env["mask"]), xf, -np.inf)
+        e = np.exp(xf - xf.max(-1, keepdims=True))
+        e = np.where(np.asarray(env["mask"]), e, 0.0)
+        return e / np.maximum(e.sum(-1, keepdims=True), 1e-9)
+
+    return KernelInstance(
+        name="sftmx", tasks=tasks, env=env, out_key="out",
+        out_scale=inum.SOFTMAX_OUT_SCALE, useful_ops=n * 10,
+        context_phases=2, ref_fn=ref)
+
+
+BUILDERS = {
+    "conv": build_conv,
+    "gemm": build_gemm,
+    "gelu": build_gelu,
+    "norm": build_norm,
+    "quant": build_quant,
+    "sftmx": build_sftmx,
+}

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the NX-CGRA integer execution model.
+
+Kernels (each <name>.py holds the pl.pallas_call + BlockSpec):
+  int8_gemm            W8A8 GEMM, int32 accum, fused requant epilogue
+  int_softmax          integer-only softmax (I-BERT shift-exp)
+  int_layernorm        integer-only LayerNorm/RMSNorm (Newton isqrt)
+  int_gelu             integer-only GELU (I-BERT erf polynomial)
+  quantize             absmax row quantization + int32->int8 requant
+  conv2d               int8 NHWC convolution (paper's conv benchmark)
+  flash_attention      fused bf16 online-softmax attention
+  int8_flash_attention integer attention (int8 QK^T/softmax/PV), multi-pass
+  int8_kv_decode_attention  decode over the int8 ring cache (per-token-head
+                       scales dequantized in-register; serving hot path)
+
+``ops`` exposes the jit'd public API with jnp fallbacks; ``ref`` holds the
+pure-jnp oracles used by the test suite.
+"""
+from . import ops, ref  # noqa: F401

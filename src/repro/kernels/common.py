@@ -1,0 +1,51 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (MXU 128x128 systolic matmul, VPU 8x128 lanes,
+~16 MiB VMEM per core) and are validated on CPU with ``interpret=True``.
+Block shapes default to MXU-aligned multiples of 128; wrappers pad
+arbitrary shapes up to block multiples and slice the result back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# TPU tiling constants
+LANE = 128          # last-dim tile (VREG lane width, MXU edge)
+SUBLANE = 8         # second-to-last-dim tile for fp32
+MXU = 128
+
+_INTERPRET = [True]  # flipped to False on real TPU deployments
+
+
+def set_interpret(mode: bool) -> None:
+    _INTERPRET[0] = bool(mode)
+
+
+def interpret_mode() -> bool:
+    return _INTERPRET[0]
+
+
+def pad_to(x: jax.Array, multiples: tuple[int, ...], value=0) -> jax.Array:
+    """Pad trailing dims of ``x`` up to the given multiples."""
+    pads = []
+    for dim, m in zip(x.shape, multiples):
+        if m <= 1:
+            pads.append((0, 0))
+        else:
+            pads.append((0, (-dim) % m))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_block(dim: int, target: int, align: int) -> int:
+    """Largest aligned block <= target covering dim (or the padded dim)."""
+    if dim <= align:
+        return align
+    b = min(target, dim)
+    return max(align, (b // align) * align)

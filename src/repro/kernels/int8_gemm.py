@@ -1,0 +1,98 @@
+"""int8 x int8 -> int32 GEMM with fused requantization epilogue.
+
+The paper's ``gemm`` kernel (Table II) adapted to the TPU MXU: int8 operands
+stream HBM->VMEM in MXU-aligned blocks (the MOB role: the Pallas pipeline's
+async copies mask HBM latency behind compute, §III-B-2), the MXU accumulates
+in int32 (the PE 4x fused-MAC role), and the epilogue requantizes to int8
+using the shift/mul16/shift scheme from ``core.inumerics`` — the exact
+arithmetic the NX-CGRA PE datapath can express.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the int32 accumulator tile stays
+resident in VMEM scratch across the K loop (one write to HBM per (m,n) tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.inumerics import RequantParams
+from .common import interpret_mode
+
+I32 = jnp.int32
+
+
+def _kernel(x_ref, w_ref, out_ref, acc_ref, *, n_k: int, s1: int, mult: int,
+            s2: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU: int8 x int8 -> int32
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=I32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if out_dtype == jnp.int32:
+            out_ref[...] = acc
+        else:
+            # requantize: shift -> 16-bit multiply -> shift (round-half-up)
+            if s1 > 0:
+                acc = (acc + (1 << (s1 - 1))) >> s1
+            acc = jnp.clip(acc, -(1 << 15), (1 << 15) - 1) * mult
+            if s2 > 0:
+                acc = (acc + (1 << (s2 - 1))) >> s2
+            out_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("requant", "out_dtype", "bm", "bn", "bk", "interpret"),
+)
+def int8_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    requant: RequantParams | None = None,
+    out_dtype=jnp.int32,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x[int8 M,K] @ w[int8 K,N] -> int32[M,N] or requantized int8[M,N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"pad shapes to block multiples first: {(m, k, n)} vs {(bm, bk, bn)}")
+    if requant is None:
+        s1 = mult = s2 = 0
+        out_dtype = jnp.int32
+    else:
+        s1, mult, s2 = requant.s1, requant.mult, requant.s2
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    kernel = functools.partial(
+        _kernel, n_k=n_k, s1=s1, mult=mult, s2=s2, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), I32)],
+        interpret=interpret_mode() if interpret is None else interpret,
+    )(x, w)

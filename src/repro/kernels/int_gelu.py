@@ -1,0 +1,77 @@
+"""Integer-only GELU Pallas kernel (the paper's ``gelu``).
+
+Elementwise I-BERT polynomial on 2D blocks; int32 in (pre-activation
+accumulator or int8 payload), int8 out with a static output scale —
+bit-identical to ``core.inumerics.i_gelu_int8``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import inumerics as inum
+from .common import interpret_mode
+
+I32 = jnp.int32
+_ERF_A, _ERF_B, _ERF_C = -0.2888, -1.769, 1.0
+
+
+def _kernel(x_ref, out_ref, *, scale: float, s1: int, mult: int, s2: int):
+    q = x_ref[...].astype(I32)
+    s_in = scale / math.sqrt(2.0)
+    q_b = int(math.floor(_ERF_B / s_in))
+    q_c = int(math.floor(_ERF_C / (_ERF_A * s_in * s_in)))
+    s_erf = _ERF_A * s_in * s_in
+    q_one = int(math.floor(1.0 / s_erf))
+    sgn = jnp.sign(q).astype(I32)
+    q_abs = jnp.minimum(jnp.abs(q), -q_b)
+    q_erf = sgn * ((q_abs + q_b) * (q_abs + q_b) + q_c)
+    acc = -(q * (q_erf + q_one))  # negate: s_out < 0 in the raw formula
+    # requantize to int8
+    if s1 > 0:
+        acc = (acc + (1 << (s1 - 1))) >> s1
+    acc = jnp.clip(acc, -(1 << 15), (1 << 15) - 1) * mult
+    if s2 > 0:
+        acc = (acc + (1 << (s2 - 1))) >> s2
+    out_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def gelu_out_scale(scale: float) -> float:
+    return max(127.0 * scale, 1e-8) / 127.0
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
+def int_gelu(
+    x: jax.Array,
+    scale: float,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GELU on int payload (real = x*scale); returns int8, scale gelu_out_scale."""
+    orig_shape = x.shape
+    n = orig_shape[-1]
+    x2 = x.reshape(-1, n)
+    m = x2.shape[0]
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    # derive the same requant params as inumerics.i_gelu_int8 (tight bound)
+    s_in = scale / math.sqrt(2.0)
+    s_erf = abs(_ERF_A * s_in * s_in)
+    s_out_raw = s_erf * scale / 2.0
+    acc_bound = int(127 * 2 / s_erf) + 127
+    p = inum.compute_requant_params(s_out_raw / gelu_out_scale(scale),
+                                    acc_bound=acc_bound)
+    kernel = functools.partial(_kernel, scale=scale, s1=p.s1, mult=p.mult, s2=p.s2)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret_mode() if interpret is None else interpret,
+    )(x2.astype(I32))
+    return out.reshape(orig_shape)

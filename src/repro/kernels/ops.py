@@ -1,0 +1,166 @@
+"""Public jit'd entry points for the kernels package.
+
+Call sites (models, serving engine) go through these wrappers, which handle
+arbitrary shapes (padding to block multiples), choose block sizes, and fall
+back to the pure-jnp reference implementation when Pallas is unavailable
+(e.g. the 512-device dry-run on the CPU backend, where interpret-mode
+execution would be prohibitive).  ``set_backend("pallas"|"jnp")`` flips the
+default; real-TPU deployments use "pallas".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.inumerics import RequantParams
+from . import ref
+from .common import pad_to
+from .conv2d import int8_conv2d
+from .flash_attention import flash_attention
+from .int8_flash_attention import int8_flash_attention
+from .int8_gemm import int8_gemm
+from .int_gelu import int_gelu, gelu_out_scale  # noqa: F401 (re-export)
+from .int_layernorm import int_layernorm
+from .int_softmax import int_softmax
+from .quantize import quantize_rows, requantize_i32
+
+_BACKEND = ["jnp"]  # "pallas" on TPU; "jnp" (XLA reference path) elsewhere
+
+
+def set_backend(name: str) -> None:
+    assert name in ("pallas", "jnp"), name
+    _BACKEND[0] = name
+
+
+def backend() -> str:
+    return _BACKEND[0]
+
+
+def _use_pallas() -> bool:
+    return _BACKEND[0] == "pallas"
+
+
+# ---------------------------------------------------------------------------
+
+
+def gemm_i8(x: jax.Array, w: jax.Array, requant: RequantParams | None = None,
+            out_dtype=jnp.int32) -> jax.Array:
+    """int8 GEMM on arbitrary [..., K] x [K, N]; pads to MXU blocks."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    if not _use_pallas():
+        out = ref.int8_gemm_ref(x.reshape(-1, k), w, requant, out_dtype)
+        return out.reshape(*lead, n)
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm = bn = bk = 128
+    xp = pad_to(x2, (bm, bk))
+    wp = pad_to(w, (bk, bn))
+    out = int8_gemm(xp, wp, requant=requant,
+                    out_dtype=jnp.int8 if requant is not None else jnp.int32,
+                    bm=bm, bn=bn, bk=bk)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def softmax_i8(x: jax.Array, scale: float, mask=None) -> jax.Array:
+    if not _use_pallas():
+        return ref.int_softmax_ref(x, scale, mask)
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    x2 = x.reshape(-1, n)
+    m = x2.shape[0]
+    bm = 8
+    xp = pad_to(x2, (bm, 1))
+    mp = pad_to(mask.reshape(-1, n), (bm, 1)) if mask is not None else None
+    out = int_softmax(xp, scale, mask=mp, bm=bm)
+    return out[:m].reshape(*lead, n)
+
+
+def layernorm_i8(x: jax.Array, gamma_q: jax.Array, beta_q: jax.Array,
+                 rms_only: bool = False) -> jax.Array:
+    if not _use_pallas():
+        return ref.int_layernorm_ref(x, gamma_q, beta_q, rms_only)
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    bm = 8
+    xp = pad_to(x2, (bm, 1))
+    out = int_layernorm(xp, gamma_q, beta_q, rms_only=rms_only, bm=bm)
+    return out[:m].reshape(*lead, d)
+
+
+def gelu_i8(x: jax.Array, scale: float) -> jax.Array:
+    if not _use_pallas():
+        return ref.int_gelu_ref(x, scale)
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    x2 = x.reshape(-1, n)
+    m = x2.shape[0]
+    bm, bn = 8, 128
+    xp = pad_to(x2, (bm, bn))
+    out = int_gelu(xp, scale, bm=bm, bn=bn)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def quant_rows(x: jax.Array):
+    if not _use_pallas():
+        return ref.quantize_rows_ref(x)
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    xp = pad_to(x2, (8, 1))
+    q, s = quantize_rows(xp, bm=8)
+    return q[:m].reshape(*lead, d), s[:m].reshape(*lead, 1)
+
+
+def requant(x: jax.Array, params: RequantParams) -> jax.Array:
+    if not _use_pallas():
+        return ref.requantize_i32_ref(x, params)
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    x2 = x.reshape(-1, n)
+    m = x2.shape[0]
+    xp = pad_to(x2, (8, 128))
+    out = requantize_i32(xp, params, bm=8, bn=128)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def conv2d_i8(x, w, bias, requant_params=None):
+    if not _use_pallas():
+        return ref.int8_conv2d_ref(x, w, bias, requant_params)
+    return int8_conv2d(x, w, bias, requant_params)
+
+
+def attention(q, k, v, causal=True, scale=None):
+    if not _use_pallas():
+        return ref.flash_attention_ref(q, k, v, causal, scale)
+    s, skv = q.shape[2], k.shape[2]
+    bq = 128 if s % 128 == 0 else (s if s <= 128 else 8)
+    bk = 128 if skv % 128 == 0 else (skv if skv <= 128 else 8)
+    return flash_attention(q, k, v, causal=causal, scale=scale, bq=bq, bk=bk)
+
+
+def attention_i8(q, k, v, scale, causal=True):
+    if not _use_pallas():
+        return ref.int8_flash_attention_ref(q, k, v, scale, causal)
+    s, skv = q.shape[2], k.shape[2]
+    bq = 128 if s % 128 == 0 else (s if s <= 128 else 8)
+    bk = 128 if skv % 128 == 0 else (skv if skv <= 128 else 8)
+    return int8_flash_attention(q, k, v, scale, causal=causal, bq=bq, bk=bk)
+
+
+def decode_attention_int8kv(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
+                            scale=None, window=0):
+    """Single-token attention over the int8 ring cache (serving hot path:
+    reads the cache once as int8, dequantizes in-register)."""
+    if not _use_pallas():
+        return ref.int8_kv_decode_attention_ref(
+            q, k_q, k_s, v_q, v_s, pos_ids, qpos, scale, window)
+    from .int8_kv_decode_attention import int8_kv_decode_attention
+    s = k_q.shape[1]
+    bk = 128 if s % 128 == 0 else (s if s <= 128 else 8)
+    return int8_kv_decode_attention(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
+                                    scale=scale, window=window, bk=bk)

@@ -1,0 +1,91 @@
+"""Quantize / dequantize Pallas kernels (the paper's ``quant``).
+
+``quantize_rows``: float -> int8 with a per-row absmax scale (one fused
+pass: row reduce + scale + round + clip, matching the PTQ activation path).
+``requantize_i32``: int32 -> int8 via the shift/mul16/shift scheme — the
+exact Table-II ``quant`` kernel (int16/int32 input on the 32-bit operator
+path, §IV-A-1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.inumerics import RequantParams
+from .common import interpret_mode
+
+I32 = jnp.int32
+
+
+def _quant_kernel(x_ref, out_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    scale = amax / 127.0
+    q = jnp.round(x / scale)
+    out_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def quantize_rows(x: jax.Array, bm: int = 8, interpret: bool | None = None):
+    """float [..., D] -> (int8 [..., D], float32 scales [..., 1])."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    assert m % bm == 0, (m, bm)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, d), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret_mode() if interpret is None else interpret,
+    )(x2)
+    return q.reshape(orig_shape), s.reshape(*orig_shape[:-1], 1)
+
+
+def _requant_kernel(x_ref, out_ref, *, s1: int, mult: int, s2: int):
+    acc = x_ref[...].astype(I32)
+    if s1 > 0:
+        acc = (acc + (1 << (s1 - 1))) >> s1
+    acc = jnp.clip(acc, -(1 << 15), (1 << 15) - 1) * mult
+    if s2 > 0:
+        acc = (acc + (1 << (s2 - 1))) >> s2
+    out_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "bm", "bn", "interpret"))
+def requantize_i32(
+    x: jax.Array,
+    params: RequantParams,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """int32/int16 payload [..., N] -> int8 via shift/mul16/shift."""
+    orig_shape = x.shape
+    n = orig_shape[-1]
+    x2 = x.reshape(-1, n).astype(I32)
+    m = x2.shape[0]
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    kernel = functools.partial(
+        _requant_kernel, s1=params.s1, mult=params.mult, s2=params.s2)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret_mode() if interpret is None else interpret,
+    )(x2)
+    return out.reshape(orig_shape)

@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each ``*_ref`` mirrors one kernel's exact semantics (integer kernels are
+bit-exact against these; float kernels match to numerical tolerance).
+The integer oracles delegate to ``core.inumerics`` — the same functions the
+CGRA simulator executes — closing the loop between the paper-faithful model
+and the TPU kernels.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core import inumerics as inum
+
+I32 = jnp.int32
+
+
+def int8_gemm_ref(x, w, requant=None, out_dtype=jnp.int32):
+    acc = jax.lax.dot_general(
+        x.astype(jnp.int8), w.astype(jnp.int8),
+        (((1,), (0,)), ((), ())), preferred_element_type=I32)
+    if requant is None:
+        return acc
+    return inum.requantize(acc, requant).astype(jnp.int8)
+
+
+def int_softmax_ref(x, scale, mask=None):
+    return inum.i_softmax(x.astype(I32), scale, mask=mask).astype(jnp.int8)
+
+
+def int_layernorm_ref(x, gamma_q, beta_q, rms_only=False):
+    out, _ = inum.i_layernorm(
+        x.astype(I32), 1.0, gamma_q.astype(I32), beta_q.astype(I32), 1.0,
+        rms_only=rms_only)
+    return out
+
+
+def int_gelu_ref(x, scale):
+    q, _ = inum.i_gelu_int8(x.astype(I32), scale)
+    return q.astype(jnp.int8)
+
+
+def quantize_rows_ref(x):
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def requantize_i32_ref(x, params):
+    return inum.requantize(x.astype(I32), params).astype(jnp.int8)
+
+
+def int8_conv2d_ref(x, w, bias, requant_params=None):
+    acc = jax.lax.conv_general_dilated(
+        x.astype(I32), w.astype(I32), (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=I32)
+    acc = acc + bias.astype(I32)
+    if requant_params is None:
+        return acc
+    return inum.requantize(acc, requant_params).astype(jnp.int8)
+
+
+def flash_attention_ref(q, k, v, causal=True, scale=None):
+    b, h, s, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, skv), bool), k=skv - s)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def int8_kv_decode_attention_ref(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
+                                 scale=None, window=0):
+    """Oracle for kernels.int8_kv_decode_attention (dequant-then-attend)."""
+    b, hq, d = q.shape
+    hkv = k_q.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    k = (k_q.astype(jnp.float32) * k_s)                 # (B,S,Hkv,D)
+    v = (v_q.astype(jnp.float32) * v_s)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s_ = jnp.einsum("bhgd,bshd->bhgs", qg, k) * scale
+    valid = (pos_ids >= 0) & (pos_ids <= qpos[:, None])
+    if window:
+        valid &= pos_ids > (qpos[:, None] - window)
+    s_ = jnp.where(valid[:, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+def int8_flash_attention_ref(q, k, v, scale, causal=True):
+    """Bit-exact integer oracle of kernels.int8_flash_attention."""
+    b, h, s, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    rshift = max(int(round(math.log2(math.sqrt(d)))), 0)
+    sc = jnp.einsum("bhsd,bhtd->bhst", q.astype(I32), k.astype(I32)) >> rshift
+    if causal:
+        cmask = jnp.tril(jnp.ones((s, skv), bool), k=skv - s)
+        sc = jnp.where(cmask, sc, -(2 ** 24))
+    p = inum.i_softmax(sc, scale)  # int32 payload in [0,127]
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(jnp.int8).astype(I32),
+                      v.astype(I32))
+
+
+def ssd_scan_ref(x, dt, b, c, a, chunk=128):
+    """Oracle for kernels.ssd_scan: sequential state-space recurrence
+    h_t = exp(dt_t * a) h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t . h_t"""
+    bh, t, p = x.shape
+    n = b.shape[-1]
+
+    def per_head(xh, dth, bh_, ch, ah):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(dtt * ah) * h + dtt * bt[:, None] * xt[None, :]
+            return h, ct @ h
+
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xh.astype(jnp.float32),
+                                        dth.astype(jnp.float32),
+                                        bh_.astype(jnp.float32),
+                                        ch.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(per_head)(x, dt, b, c, a[:, 0]).astype(x.dtype)

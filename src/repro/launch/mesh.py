@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests see 1 device; only dryrun.py
+sets the 512-placeholder-device XLA flag before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with multi_pod=True."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
+    """Re-mesh after node loss: whatever devices remain, same model axis.
+
+    Used by the elastic-restore path: a 512-chip checkpoint restores onto
+    e.g. 256 chips by rebuilding (data', model) and re-sharding.
+    """
+    assert n_devices % model_parallel == 0, (n_devices, model_parallel)
+    shape = (n_devices // model_parallel, model_parallel)
+    return jax.make_mesh(
+        shape, ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1

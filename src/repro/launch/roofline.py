@@ -1,0 +1,169 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh, derive the three terms from
+the compiled dry-run (all per-device, per step):
+
+  compute term    = HLO_FLOPs / peak_FLOPs        (197 TF/s bf16; int8 ops
+                                                   execute at 394 TOP/s)
+  memory term     = HLO_mem_bytes / HBM_bw        (819 GB/s)
+  collective term = collective_bytes / ICI_bw     (50 GB/s/link; all-reduce
+                                                   counted once at full size
+                                                   ~ ring 2(N-1)/N factor)
+
+Sources: HLO_FLOPs and collective_bytes come from the trip-count-corrected
+HLO parse (hlo_analysis.py — XLA's cost_analysis counts scan bodies once and
+omits collectives); HLO_mem_bytes is operand+result bytes at fusion
+boundaries, XLA's own bytes-accessed convention.
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode), with
+N_active for MoE.  The MODEL/HLO ratio exposes remat recompute and dispatch
+overhead; the bottleneck label + suggested lever drive §Perf.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline          # markdown table
+  PYTHONPATH=src python -m repro.launch.roofline --json   # machine-readable
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from ..configs import SHAPES, get_config
+from ..models.config import ArchConfig
+
+PEAK_BF16 = 197e12        # FLOP/s per chip
+PEAK_INT8 = 394e12        # OP/s per chip
+HBM_BW = 819e9            # B/s per chip
+ICI_BW = 50e9             # B/s per link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def active_params(cfg: ArchConfig) -> float:
+    """Parameters touched per token (MoE: routed top-k + shared only)."""
+    total = 0.0
+    d = cfg.d_model
+    # embeddings (lm head matmul; the input gather is negligible)
+    total += cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    for kind in cfg.block_kinds:
+        if kind in ("attn", "attn_swa", "enc", "shared_attn"):
+            total += 2 * d * (cfg.n_heads + cfg.n_kv_heads) * cfg.head_dim
+            total += 3 * d * cfg.d_ff
+        elif kind in ("moe", "moe_swa"):
+            total += 2 * d * (cfg.n_heads + cfg.n_kv_heads) * cfg.head_dim
+            ff = cfg.moe_d_ff or cfg.d_ff
+            total += 3 * d * ff * cfg.n_experts_per_tok
+            total += 3 * d * ff * cfg.n_shared_experts
+            total += d * cfg.n_experts  # router
+        elif kind == "xattn":
+            total += 2 * d * (cfg.n_heads + cfg.n_kv_heads) * cfg.head_dim
+            total += 3 * d * cfg.d_ff
+        elif kind == "dec":
+            total += 4 * d * (cfg.n_heads + cfg.n_kv_heads) * cfg.head_dim
+            total += 3 * d * cfg.d_ff
+        elif kind == "mamba2":
+            d_in = cfg.ssm_expand * d
+            total += d * (2 * d_in + 2 * cfg.ssm_state) + d_in * d
+        elif kind == "mlstm":
+            d_up = 2 * d
+            total += 2 * d * d_up + 3 * d_up * d_up + d_up * d
+        elif kind == "slstm":
+            total += 4 * d * d + d * d
+    if cfg.is_encoder_decoder:
+        # encoder layers (bidirectional attn + mlp)
+        total += cfg.n_encoder_layers * (
+            2 * d * (cfg.n_heads + cfg.n_kv_heads) * cfg.head_dim + 3 * d * cfg.d_ff)
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape: dict) -> float:
+    """Matmul-parameter FLOPs for the cell, global (attention excluded —
+    its quadratic extra shows up in the MODEL/HLO ratio note)."""
+    n = active_params(cfg)
+    if shape["kind"] == "train":
+        tokens = shape["seq_len"] * shape["global_batch"]
+        return 6.0 * n * tokens
+    if shape["kind"] == "prefill":
+        tokens = shape["seq_len"] * shape["global_batch"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape["global_batch"]
+
+
+_LEVERS = {
+    "compute": ("raise arithmetic intensity: int8 (w8a8) execution doubles "
+                "per-chip peak; reduce remat recompute"),
+    "memory": ("fuse / narrow the residual stream traffic (int8 KV cache, "
+               "bf16 gradient buffers), or grow per-device batch to amortize "
+               "weight reads"),
+    "collective": ("remap logical axes (less TP for small models), "
+                   "reduce-scatter instead of all-reduce, int8 gradient "
+                   "compression, overlap collectives behind the layer scan"),
+}
+
+
+def load_cells(mesh: str = "16x16", precision: str = "bf16") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, mesh, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("precision", "bf16") != precision:
+            continue
+        out.append(rec)
+    return out
+
+
+def roofline_row(rec: dict) -> dict:
+    cfg = get_config(rec["arch"], precision=rec.get("precision", "bf16"))
+    shape = SHAPES[rec["shape"]]
+    peak = PEAK_INT8 if rec.get("precision") == "w8a8" else PEAK_BF16
+    flops = rec["hlo"]["flops_per_device"]
+    mem = rec["hlo"].get("mem_bytes_per_device", 0.0)
+    coll = rec["hlo"]["collective_bytes_per_device"]
+    t_c = flops / peak
+    t_m = mem / HBM_BW
+    t_n = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / rec["n_devices"]
+    total = max(t_c + 0, max(terms.values()))
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "hlo_flops_per_device": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (t_c / total) if total else 0.0,
+        "peak_bytes_gib": rec["memory"]["peak_bytes_per_device"] / 2 ** 30,
+        "lever": _LEVERS[dominant],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--precision", default="bf16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = [roofline_row(r) for r in load_cells(args.mesh, args.precision)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+    hdr = (f"| {'arch':22s} | {'shape':11s} | {'compute s':>10s} | "
+           f"{'memory s':>10s} | {'collect s':>10s} | {'bound':10s} | "
+           f"{'MODEL/HLO':>9s} | {'roofline%':>9s} | {'GiB/dev':>7s} |")
+    print(hdr)
+    print("|" + "-" * (len(hdr) - 2) + "|")
+    for r in rows:
+        print(f"| {r['arch']:22s} | {r['shape']:11s} | {r['compute_s']:10.4f} | "
+              f"{r['memory_s']:10.4f} | {r['collective_s']:10.4f} | "
+              f"{r['dominant']:10s} | {r['useful_ratio']:9.3f} | "
+              f"{100*r['roofline_fraction']:8.1f}% | {r['peak_bytes_gib']:7.2f} |")
+
+
+if __name__ == "__main__":
+    main()

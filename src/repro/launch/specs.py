@@ -1,0 +1,202 @@
+"""Input specs + sharding assignments for every (arch x shape x mesh) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for every model input of a cell:
+train -> {tokens, labels}; prefill/decode -> {tokens, positions, states}.
+
+``make_axis_env`` binds the logical model axes to the physical mesh with
+per-arch strategy decisions:
+
+  * heads-vs-sequence KV sharding: KV heads shard on "model" only when
+    divisible (n_kv % tp == 0); otherwise the cache shards its SEQUENCE dim
+    on "model" (sequence-parallel decode — GSPMD inserts the partial-softmax
+    collectives).
+  * EP-vs-TP MoE: experts shard on "model" when n_experts % tp == 0,
+    otherwise each expert's hidden dim shards (Megatron-style TP experts) —
+    avoids GSPMD padding 8 Mixtral experts onto a 16-way axis (2x memory).
+  * batch=1 long-context cells replicate batch and shard the KV sequence
+    over BOTH data and model axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..dist.sharding import AxisEnv
+from ..models import ArchConfig, init_params, init_encdec_params, init_states
+from ..models.config import ArchConfig
+from .mesh import mesh_axis_size
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    """Resolved distribution strategy for one (arch, shape, mesh) cell."""
+
+    env: AxisEnv
+    kv_heads_on_model: bool
+    ep_mode: bool                  # experts on model axis?
+    batch_axes: tuple[str, ...]    # mesh axes sharding the batch dim
+    seq_axes_kv: tuple[str, ...]   # mesh axes sharding the KV sequence dim
+
+
+def make_cell_plan(cfg: ArchConfig, mesh, kind: str, global_batch: int,
+                   fsdp: bool = True,
+                   variant: str = "baseline") -> CellPlan:
+    tp = mesh_axis_size(mesh, "model")
+    pod = mesh_axis_size(mesh, "pod")
+    data = mesh_axis_size(mesh, "data")
+    batch_axes: tuple[str, ...] = ()
+    n = global_batch
+    for ax, size in (("pod", pod), ("data", data)):
+        if ax in mesh.shape and n % size == 0 and n >= size:
+            batch_axes += (ax,)
+            n //= size
+    no_tp = variant == "no_tp"
+    kv_heads_on_model = (cfg.n_kv_heads % tp == 0 and cfg.n_kv_heads >= tp
+                         and not no_tp)
+    ep_mode = cfg.n_experts > 0 and cfg.n_experts % tp == 0 and not no_tp
+    # KV sequence sharding: model axis when heads don't shard; plus the data
+    # axis for batch-1 long-context cells
+    seq_axes: tuple[str, ...] = ()
+    if not kv_heads_on_model and kind in ("decode", "prefill"):
+        seq_axes += ("model",)
+    if not batch_axes and kind == "decode":
+        seq_axes = ("data",) + seq_axes
+    env = AxisEnv(
+        dp=batch_axes,
+        fsdp=(("data",) if (fsdp and kind == "train") else ())
+        + (("model",) if (no_tp and kind == "train") else ()),
+        tp=() if no_tp else ("model",),
+        ep=("model",) if ep_mode else (),
+        # sequence parallelism: shard the residual stream's seq dim on the
+        # model axis between TP regions (Megatron-SP) for train/prefill —
+        # bounds the scan-carried activations and the saved TP outputs
+        sp=("model",) if kind in ("train", "prefill") else (),
+        active=True,
+        sizes=tuple((name, mesh.shape[name]) for name in mesh.shape),
+    )
+    return CellPlan(env=env, kv_heads_on_model=kv_heads_on_model,
+                    ep_mode=ep_mode, batch_axes=batch_axes,
+                    seq_axes_kv=seq_axes)
+
+
+# ---------------------------------------------------------------------------
+# abstract params / states
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig, key=None):
+    init = init_encdec_params if cfg.is_encoder_decoder else init_params
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda: init(k, cfg))
+
+
+def abstract_states(cfg: ArchConfig, batch: int, max_seq: int,
+                    int8_kv: bool = False):
+    return jax.eval_shape(
+        lambda: init_states(cfg, batch, max_seq, int8_kv=int8_kv))
+
+
+# ---------------------------------------------------------------------------
+# state sharding specs (mirrors init_states leaf layout)
+# ---------------------------------------------------------------------------
+
+def _state_leaf_spec(path: str, shape, plan: CellPlan) -> P:
+    """Leaves are stacked over periods: dim0 = period."""
+    b = plan.batch_axes or None
+    if path.endswith(("/xk", "/xv")):
+        # static cross-attn KV (periods, B, Sv, H, D): source length and kv
+        # heads rarely divide the mesh; shard the head_dim instead
+        hd_ok = shape[-1] % 16 == 0
+        return P(None, b, None, None, "model" if hd_ok else None)
+    if "/kv/" in path or path.endswith("pos_ids"):
+        seq = plan.seq_axes_kv or None
+        if path.endswith(("/k", "/v", "/k_s", "/v_s")):
+            head = "model" if plan.kv_heads_on_model else None
+            # (periods, B, S, H, D?) — scale leaves are (periods, B, S, H, 1)
+            dims = [None, b, seq, head] + [None] * (len(shape) - 4)
+            return P(*dims[: len(shape)])
+        if path.endswith("pos_ids"):
+            return P(None, b, seq)
+    # recurrent states: (periods, B, heads/d, ...) — shard dim2 on model when
+    # divisible, else replicate
+    if len(shape) >= 3:
+        tp_ok = shape[2] % 16 == 0  # model axis is 16 in both meshes
+        return P(None, b, "model" if tp_ok else None,
+                 *([None] * (len(shape) - 3)))
+    if len(shape) == 2:
+        return P(None, b)
+    return P(None)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def state_specs(states_abs, plan: CellPlan):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _state_leaf_spec(_path_str(path), x.shape, plan),
+        states_abs)
+
+
+# ---------------------------------------------------------------------------
+# input specs per cell kind
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, kind: str, seq_len: int, global_batch: int,
+                int8_kv: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    b = global_batch
+    i32 = jnp.int32
+    if kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, seq_len), i32),
+            "labels": jax.ShapeDtypeStruct((b, seq_len), i32),
+        }
+        if cfg.family == "vlm":
+            specs["kv_source"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_audio_frames, cfg.d_model), jnp.float32)
+        return specs
+    if kind == "prefill":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, seq_len), i32),
+            "positions": jax.ShapeDtypeStruct((b, seq_len), i32),
+            "states": abstract_states(cfg, b, seq_len, int8_kv),
+        }
+    elif kind == "decode":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "positions": jax.ShapeDtypeStruct((b, 1), i32),
+            "states": abstract_states(cfg, b, seq_len, int8_kv),
+        }
+    else:
+        raise ValueError(kind)
+    if cfg.family == "vlm":
+        specs["kv_source"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        specs["kv_source"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def input_shardings(cfg: ArchConfig, kind: str, specs: dict, plan: CellPlan,
+                    mesh) -> dict:
+    b = plan.batch_axes or None
+    out: dict = {}
+    for name, v in specs.items():
+        if name == "states":
+            out[name] = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), state_specs(v, plan))
+        elif name in ("tokens", "labels", "positions"):
+            out[name] = NamedSharding(mesh, P(b, None))
+        elif name in ("kv_source", "frames"):
+            out[name] = NamedSharding(mesh, P(b, None, None))
+        else:
+            raise KeyError(name)
+    return out

@@ -1,0 +1,11 @@
+"""Model substrate: one block-pattern stack covers all 10 assigned archs."""
+from .config import ArchConfig  # noqa: F401
+from .lm import (  # noqa: F401
+    exec_mode,
+    forward,
+    init_params,
+    init_states,
+    lm_loss,
+    precompute_cross_states,
+)
+from .encdec import encdec_forward, encdec_loss, init_encdec_params, encode  # noqa: F401

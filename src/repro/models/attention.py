@@ -1,0 +1,334 @@
+"""Attention: GQA/MQA, sliding-window, cross-attention, KV cache (bf16/int8).
+
+One implementation serves train (full causal), prefill (causal + cache
+write), decode (single query vs. cache) and cross-attention (static KV from
+encoder/vision features).  The KV cache is a uniform ring structure:
+
+    cache = {"k": (B,S,Hkv,D), "v": (B,S,Hkv,D), "pos_ids": (B,S) int32}
+
+``pos_ids`` holds the absolute position stored in each slot (-1 = empty);
+sliding-window archs allocate S = window and overwrite slots mod S, full
+attention allocates S = max_seq.  Masking always derives from pos_ids, so
+full/windowed/ring behavior is one code path.  RoPE is applied at write
+time with absolute positions, so ring overwrites need no re-rotation.
+
+In w8a8 mode the cache stores int8 payloads with per-(token,head) scales
+(the NX-CGRA thesis applied to serving memory: 2x KV capacity per HBM byte),
+and prefill attention runs the integer kernel (int8 QK^T -> i-softmax ->
+int8 PV).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_hint
+from ..kernels import ops
+from .config import ArchConfig
+from .layers import ExecMode, apply_linear, apply_rope, dense_init
+
+F32 = jnp.float32
+NEG = -1e30
+
+# canonical static int8 scale for activations entering integer attention
+ATTN_INT_SCALE = 1.0 / 16.0
+
+
+def init_attn_params(key, cfg: ArchConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, nq * hd),
+        "wk": dense_init(ks[1], d, nkv * hd),
+        "wv": dense_init(ks[2], d, nkv * hd),
+        "wo": dense_init(ks[3], nq * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), F32)
+        p["bk"] = jnp.zeros((nkv * hd,), F32)
+        p["bv"] = jnp.zeros((nkv * hd,), F32)
+    return p
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, *, int8: bool,
+               window: int = 0, dtype=jnp.bfloat16) -> dict:
+    s = min(window, max_seq) if window else max_seq
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    cache: dict[str, Any] = {
+        "pos_ids": jnp.full((batch, s), -1, jnp.int32),
+    }
+    if int8:
+        cache["k"] = jnp.zeros((batch, s, hkv, hd), jnp.int8)
+        cache["v"] = jnp.zeros((batch, s, hkv, hd), jnp.int8)
+        cache["k_s"] = jnp.ones((batch, s, hkv, 1), F32)
+        cache["v_s"] = jnp.ones((batch, s, hkv, 1), F32)
+    else:
+        cache["k"] = jnp.zeros((batch, s, hkv, hd), dtype)
+        cache["v"] = jnp.zeros((batch, s, hkv, hd), dtype)
+    return cache
+
+
+def _quant_kv(x: jax.Array):
+    """per-(token, head) symmetric int8."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True), 1e-8)
+    s = amax / 127.0
+    return jnp.clip(jnp.round(x.astype(F32) / s), -128, 127).astype(jnp.int8), s
+
+
+def _write_cache(cache: dict, k, v, positions):
+    """Write k/v (B,T,Hkv,D) at ring slots positions % S.
+
+    Full-length writes (prefill: T == S) assign directly — a scatter here
+    makes GSPMD replicate the whole cache + update across the mesh
+    (measured 90 GB/step on whisper prefill_32k).
+    """
+    s = cache["k"].shape[1]
+    if k.shape[1] == s:
+        cache = dict(cache)
+        if "k_s" in cache:
+            k_q, k_s = _quant_kv(k)
+            v_q, v_s = _quant_kv(v)
+            cache.update(k=k_q, v=v_q, k_s=k_s, v_s=v_s)
+        else:
+            cache.update(k=k.astype(cache["k"].dtype),
+                         v=v.astype(cache["v"].dtype))
+        cache["pos_ids"] = positions
+        return cache
+    slots = positions % s                                    # (B, T)
+    b_idx = jnp.arange(k.shape[0])[:, None]
+    if "k_s" in cache:
+        k_q, k_s = _quant_kv(k)
+        v_q, v_s = _quant_kv(v)
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[b_idx, slots].set(k_q)
+        cache["v"] = cache["v"].at[b_idx, slots].set(v_q)
+        cache["k_s"] = cache["k_s"].at[b_idx, slots].set(k_s)
+        cache["v_s"] = cache["v_s"].at[b_idx, slots].set(v_s)
+    else:
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[b_idx, slots].set(k.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[b_idx, slots].set(v.astype(cache["v"].dtype))
+    cache["pos_ids"] = cache["pos_ids"].at[b_idx, slots].set(positions)
+    return cache
+
+
+def _read_cache(cache: dict, dtype):
+    if "k_s" in cache:
+        k = cache["k"].astype(F32) * cache["k_s"]
+        v = cache["v"].astype(F32) * cache["v_s"]
+        return k.astype(dtype), v.astype(dtype)
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+ATTN_Q_CHUNK = 1024  # query-chunked softmax: streams the S x S score matrix
+
+
+def _sdpa(q, k, v, qpos, kpos, scale, dtype, *, causal=True, window=0,
+          valid=None, chunk=ATTN_Q_CHUNK):
+    """Grouped-GQA attention with query chunking.
+
+    q (B,Tq,Hq,D), k/v (B,Tk,Hkv,D); qpos (B,Tq), kpos (B,Tk);
+    valid (B,Tk) bool or None.  Masks are built per chunk from positions —
+    the (Tq,Tk) score matrix is never materialized beyond a chunk.  The XLA
+    analogue of the Pallas flash kernel (which serves the real-TPU path).
+    """
+    b, tq, hq, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    # KV layout for TP (measured in EXPERIMENTS.md §4A/§4C):
+    #  - heads divide the model axis -> shard heads (scores shard cleanly);
+    #  - else for prefill/train, repeat KV heads up to the TP degree
+    #    (storage unchanged) — otherwise GSPMD ALL-GATHERS the f32 score
+    #    tensor (2.4 TB/step on internlm2 train_4k);
+    #  - else (decode against a seq-sharded cache, or 56-head Yi where no
+    #    integer repeat works) shard the KV SEQUENCE: partial softmax is
+    #    collective-cheap, and repeating a seq-sharded cache would
+    #    all-to-all the whole cache every layer.
+    from ..dist.sharding import axis_env
+    env = axis_env()
+    tp = env.axes_size(env.tp) if env.active else 1
+    kv_hint: tuple | None = None
+    if tp > 1:
+        if hkv % tp == 0:
+            kv_hint = ("dp", "tp", None, None)
+        elif tq > 1 and hq % tp == 0 and tp % hkv == 0:
+            rep = tp // hkv
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+            hkv = hkv * rep
+            kv_hint = ("dp", "tp", None, None)
+        elif tk % tp == 0 and (tq == 1 or valid is not None):
+            # serving paths (the cache is already seq-sharded): shard the KV
+            # sequence.  NOT for training — the partial-softmax regather
+            # costs more than it saves there (measured on yi-34b train)
+            kv_hint = ("dp", None, "tp", None)
+    g = hq // hkv
+    # operands stay bf16 (MXU native); accumulation is f32 via
+    # preferred_element_type — halves K/V HBM and boundary traffic vs
+    # upcasting the tensors themselves
+    kt = jnp.swapaxes(k, 1, 2)                              # (B,Hkv,Tk,D)
+    vt = jnp.swapaxes(v, 1, 2)
+    if kv_hint is not None:
+        kt = shard_hint(kt, *kv_hint)
+        vt = shard_hint(vt, *kv_hint)
+    # gather the per-key POSITIONS (4-byte/key) before building masks; else
+    # GSPMD gathers the computed (Tc, Tk) boolean mask itself (measured
+    # 26 GB/step of pred traffic on whisper prefill)
+    kpos = shard_hint(kpos, "dp", None)
+    if valid is not None:
+        valid = shard_hint(valid, "dp", None)
+
+    def chunk_attn(q_c, qpos_c):
+        """q_c (B,Tc,Hq,D), qpos_c (B,Tc) -> (B,Tc,Hq,D)"""
+        tc = q_c.shape[1]
+        qg = q_c.reshape(b, tc, hkv, g, d)
+        s = jnp.einsum("bthgd,bhkd->bthgk", qg, kt,
+                       preferred_element_type=F32) * scale  # (B,Tc,Hkv,G,Tk)
+        m = jnp.ones((b, tc, tk), bool)
+        if causal:
+            m &= kpos[:, None, :] <= qpos_c[:, :, None]
+        if window:
+            m &= kpos[:, None, :] > (qpos_c[:, :, None] - window)
+        if valid is not None:
+            m &= valid[:, None, :]
+        s = jnp.where(m[:, :, None, None, :], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bthgk,bhkd->bthgd", p.astype(dtype), vt,
+                       preferred_element_type=F32)
+        return o.reshape(b, tc, hq, d).astype(dtype)
+
+    if tq <= chunk:
+        return chunk_attn(q, qpos)
+    pad = (-tq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad)), constant_values=-1)
+    nch = q.shape[1] // chunk
+    q_ch = jnp.moveaxis(q.reshape(b, nch, chunk, hq, d), 1, 0)
+    p_ch = jnp.moveaxis(qpos.reshape(b, nch, chunk), 1, 0)
+
+    def body(_, xs):
+        qc, pc = xs
+        return None, chunk_attn(qc, pc)
+
+    _, out = jax.lax.scan(jax.checkpoint(body), None, (q_ch, p_ch))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nch * chunk, hq, d)
+    return out[:, :tq]
+
+
+def _int_attention(q, k, v, cfg: ArchConfig, causal: bool, window: int):
+    """Integer prefill attention (paper path): static-scale int8 q/k/v."""
+    b, s, hq, hd = q.shape
+    qi = jnp.clip(jnp.round(q.astype(F32) / ATTN_INT_SCALE), -128, 127).astype(jnp.int8)
+    ki = jnp.clip(jnp.round(k.astype(F32) / ATTN_INT_SCALE), -128, 127).astype(jnp.int8)
+    vi, v_s = _quant_kv(v)  # per-(token, head) scales
+    rshift = max(int(round(math.log2(math.sqrt(hd)))), 0)
+    # acc-unit scale after the power-of-two fold; the residual sqrt factor is
+    # folded into the integer softmax scale
+    sqrt_resid = (2.0 ** rshift) / math.sqrt(hd)
+    s_score = ATTN_INT_SCALE * ATTN_INT_SCALE * sqrt_resid
+    acc = ops.attention_i8(
+        jnp.transpose(qi, (0, 2, 1, 3)),
+        jnp.transpose(ki, (0, 2, 1, 3)),
+        jnp.transpose(vi, (0, 2, 1, 3)),
+        scale=s_score, causal=causal)                   # (B,H,S,D) int32
+    rep = hq // cfg.n_kv_heads
+    v_sb = jnp.repeat(jnp.transpose(v_s, (0, 2, 1, 3)), rep, axis=1)  # B,H,S,1
+    # probabilities carry 1/127; v scale varies per source token -- use the
+    # per-head mean dequant (exact per-token dequant inside the kernel is the
+    # hillclimb variant)
+    v_sm = jnp.mean(v_sb, axis=2, keepdims=True)
+    out = acc.astype(F32) * (1.0 / 127.0) * v_sm
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+def cross_kv_proj(params: dict, kv_source: jax.Array, cfg: ArchConfig,
+                  mode: ExecMode) -> tuple[jax.Array, jax.Array]:
+    """Project cross-attention K/V from source features (once per request)."""
+    b, sv = kv_source.shape[:2]
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = apply_linear(kv_source, params["wk"], mode, params.get("bk"))
+    v = apply_linear(kv_source, params["wv"], mode, params.get("bv"))
+    return k.reshape(b, sv, hkv, hd), v.reshape(b, sv, hkv, hd)
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    mode: ExecMode,
+    positions: jax.Array,              # (B, T) absolute positions
+    cache: dict | None = None,
+    kv_source: jax.Array | None = None,  # cross-attention source features
+    cross_kv: tuple | None = None,       # precomputed (xk, xv) — decode path
+    window: int = 0,
+) -> tuple[jax.Array, dict | None]:
+    b, t, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cross = kv_source is not None or cross_kv is not None
+
+    q = apply_linear(x, params["wq"], mode, params.get("bq"),
+                     use_hint=(None, "tp"))
+    q = q.reshape(b, t, hq, hd)
+    if cross_kv is not None:
+        # static cross KV, computed once (precompute_cross_states): the
+        # per-decode-step recompute was 87% of vision-90b decode FLOPs
+        k = cross_kv[0].astype(x.dtype)
+        v = cross_kv[1].astype(x.dtype)
+    else:
+        src = kv_source if cross else x
+        k = apply_linear(src, params["wk"], mode, params.get("bk"),
+                         use_hint=(None, "tp"))
+        v = apply_linear(src, params["wv"], mode, params.get("bv"),
+                         use_hint=(None, "tp"))
+        k = k.reshape(b, src.shape[1], hkv, hd)
+        v = v.reshape(b, src.shape[1], hkv, hd)
+    # inside the TP region heads take the model axis (seq gathers back)
+    q = shard_hint(q, "dp", None, "tp", None)
+    k = shard_hint(k, "dp", None, "tp", None)
+
+    if not cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        src_pos = positions
+        k = apply_rope(k, src_pos, cfg.rope_theta)
+
+    scale = 1.0 / math.sqrt(hd)
+    dtype = x.dtype
+
+    if cross:
+        # static KV, no mask (all source positions valid)
+        kpos = jnp.zeros((b, k.shape[1]), jnp.int32)
+        out = _sdpa(q, k, v, positions, kpos, scale, dtype, causal=False)
+    elif cache is not None:
+        cache = _write_cache(cache, k, v, positions)
+        if "k_s" in cache and t == 1 and ops.backend() == "pallas":
+            # serving hot path: fused int8-KV decode kernel (one int8 pass
+            # over the cache, in-register dequant — §Perf cell C)
+            out = ops.decode_attention_int8kv(
+                q[:, 0], cache["k"], cache["k_s"], cache["v"], cache["v_s"],
+                cache["pos_ids"], positions[:, 0], scale=scale,
+                window=window)[:, None].astype(dtype)
+        else:
+            kc, vc = _read_cache(cache, dtype)              # (B,S,Hkv,D)
+            kpos = cache["pos_ids"]                         # (B,S)
+            out = _sdpa(q, kc, vc, positions, kpos, scale, dtype, causal=True,
+                        window=window, valid=kpos >= 0)
+    else:
+        # training / no-cache prefill
+        if mode.integer and window == 0:
+            out = _int_attention(q, k, v, cfg, causal=True, window=window)
+        elif ops.backend() == "pallas" and window == 0 and t % 8 == 0:
+            out = jnp.transpose(
+                ops.attention(jnp.transpose(q, (0, 2, 1, 3)),
+                              jnp.transpose(k, (0, 2, 1, 3)),
+                              jnp.transpose(v, (0, 2, 1, 3)),
+                              causal=True, scale=scale), (0, 2, 1, 3))
+        else:
+            out = _sdpa(q, k, v, positions, positions, scale, dtype,
+                        causal=True, window=window)
+    out = out.astype(dtype).reshape(b, t, hq * hd)
+    out = apply_linear(out, params["wo"], mode, use_hint=("tp", None))
+    return shard_hint(out, "dp", "sp", None), cache

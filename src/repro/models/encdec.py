@@ -1,0 +1,86 @@
+"""Encoder-decoder model (Whisper-style) built on the same block substrate.
+
+Encoder: bidirectional attention over precomputed audio-frame embeddings
+(the conv frontend is a STUB per the brief — ``frontend.py`` supplies frame
+embeddings directly).  Decoder: causal self-attention + cross-attention to
+the encoder output, sharing the decoder-LM scan machinery.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import block_forward, init_block_params
+from .config import ArchConfig
+from .layers import ExecMode, apply_norm, embed_init, norm_params
+from .lm import exec_mode, forward as lm_forward
+
+F32 = jnp.float32
+
+
+def init_encdec_params(key, cfg: ArchConfig) -> dict:
+    assert cfg.is_encoder_decoder
+    ks = jax.random.split(key, 3)
+    n_enc = cfg.n_encoder_layers
+    enc_stacked = [init_block_params(jax.random.fold_in(ks[0], i), "enc", cfg)
+                   for i in range(n_enc)]
+    enc = {
+        "pos_embed": embed_init(ks[1], cfg.n_audio_frames, cfg.d_model),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_stacked),
+        "final_norm": norm_params(cfg.d_model, cfg.norm_type),
+    }
+    from .lm import init_params
+    dec_cfg = cfg
+    dec = init_params(ks[2], dec_cfg)
+    return {"encoder": enc, "decoder": dec}
+
+
+def encode(params: dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_audio, d_model) stub frontend output."""
+    mode = exec_mode(cfg)
+    b, s, _ = frames.shape
+    x = frames.astype(mode.compute_dtype) + params["encoder"]["pos_embed"][None, :s]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, layer_params):
+        x = carry
+        x, _ = block_forward("enc", layer_params, x, cfg, mode, positions,
+                             causal=False)
+        return x, None
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"]["layers"])
+    return apply_norm(x, params["encoder"]["final_norm"], cfg, mode)
+
+
+def encdec_forward(params: dict, cfg: ArchConfig, frames: jax.Array,
+                   tokens: jax.Array, states=None, positions=None,
+                   enc_out: jax.Array | None = None):
+    """Full enc-dec step.  Pass ``enc_out`` to skip re-encoding (decode —
+    the cached cross-KV in ``states`` was filled by the prefill call)."""
+    fresh_encode = enc_out is None
+    if fresh_encode:
+        enc_out = encode(params, cfg, frames)
+    if states is not None and fresh_encode:
+        from .lm import precompute_cross_states
+        states = precompute_cross_states(params["decoder"], cfg, enc_out,
+                                         states)
+    logits, states = lm_forward(
+        params["decoder"], cfg, tokens, positions=positions, states=states,
+        kv_source=enc_out)
+    return logits, states, enc_out
+
+
+def encdec_loss(params: dict, cfg: ArchConfig, frames: jax.Array,
+                tokens: jax.Array, labels: jax.Array) -> jax.Array:
+    lg, _, _ = encdec_forward(params, cfg, frames, tokens)
+    lg = lg.astype(F32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.where(mask, logz - gold, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

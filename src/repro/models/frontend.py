@@ -1,0 +1,50 @@
+"""Modality frontends — STUBS per the brief.
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer BACKBONE; the
+modality frontend supplies precomputed frame/patch embeddings via
+``input_specs()``.  These helpers generate deterministic synthetic features
+with the right shapes for smoke tests and examples, plus a real (tiny) conv
+patch embedder exercising the int8 conv kernel so the frontend path is
+executable end-to-end when wanted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ArchConfig
+
+
+def audio_frames_stub(key, batch: int, n_frames: int, d_model: int) -> jax.Array:
+    """Whisper conv-stem output stand-in: (B, n_frames, d_model)."""
+    return jax.random.normal(key, (batch, n_frames, d_model), jnp.float32) * 0.02
+
+
+def vision_tokens_stub(key, batch: int, n_tokens: int, d_model: int) -> jax.Array:
+    """ViT feature stand-in for cross-attention: (B, n_tokens, d_model)."""
+    return jax.random.normal(key, (batch, n_tokens, d_model), jnp.float32) * 0.02
+
+
+def conv_patch_embed_int8(key, images: jax.Array, d_model: int,
+                          patch: int = 16) -> jax.Array:
+    """Executable tiny patch embedder on the int8 conv kernel.
+
+    images: (B, H, W, 3) float in [-1, 1].  Returns (B, H/p * W/p, d_model).
+    Quantizes image + weights to int8 and runs the paper's conv kernel as a
+    strided patchify (non-overlapping windows = reshape + conv 1x1 per patch).
+    """
+    b, h, w, c = images.shape
+    assert h % patch == 0 and w % patch == 0
+    # patchify: (B, H/p, W/p, p*p*c)
+    x = images.reshape(b, h // patch, patch, w // patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h // patch, w // patch, -1)
+    xi = jnp.clip(jnp.round(x * 127.0), -128, 127).astype(jnp.int8)
+    wf = jax.random.normal(key, (1, 1, patch * patch * c, d_model), jnp.float32)
+    wf = wf / jnp.sqrt(float(patch * patch * c))
+    ws = jnp.maximum(jnp.max(jnp.abs(wf)), 1e-8) / 127.0
+    wi = jnp.clip(jnp.round(wf / ws), -128, 127).astype(jnp.int8)
+    bias = jnp.zeros((d_model,), jnp.int32)
+    acc = ops.conv2d_i8(xi, wi, bias)            # (B, H/p, W/p, d) int32
+    out = acc.astype(jnp.float32) * (ws / 127.0)
+    return out.reshape(b, -1, d_model)

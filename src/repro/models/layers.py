@@ -1,0 +1,216 @@
+"""Base layers: Linear (bf16 + W8A8 integer path), norms, RoPE, embeddings.
+
+The W8A8 path is the paper's technique at model scale: int8 weights
+(per-output-channel scales, PTQ'd offline or at init), dynamic per-row
+activation quantization, int8 x int8 -> int32 MXU matmul, float rescale.
+Non-linearities in w8a8 mode run the integer-only kernels (int softmax /
+layernorm / GELU) through ``kernels.ops``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_hint
+from ..kernels import ops
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jax.Array:
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear: float path + integer path
+# ---------------------------------------------------------------------------
+
+def linear(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+           compute_dtype=DEFAULT_DTYPE) -> jax.Array:
+    """Matmul in compute dtype.  The MXU accumulates fp32 internally; asking
+    for a bf16 result (rather than f32-then-cast) lets GSPMD run the
+    row-parallel partial-sum all-reduces — and their dgrad transposes — in
+    bf16: measured 2x ICI traffic on TP'd layers."""
+    out = jax.lax.dot_general(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=compute_dtype)
+    if bias is not None:
+        out = out + bias.astype(compute_dtype)
+    return out
+
+
+def linear_w8a8(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                bias: jax.Array | None = None,
+                compute_dtype=DEFAULT_DTYPE) -> jax.Array:
+    """W8A8: dynamic per-row activation quant -> int8 GEMM -> rescale.
+
+    w_q: int8 [in, out]; w_scale: fp32 [out] (per-output-channel).
+    """
+    x_q, x_scale = ops.quant_rows(x.astype(jnp.float32))
+    acc = ops.gemm_i8(x_q, w_q)                      # int32 [..., out]
+    out = acc.astype(jnp.float32) * x_scale * w_scale
+    if bias is not None:
+        out = out + bias
+    return out.astype(compute_dtype)
+
+
+def quantize_weight(w: jax.Array) -> dict:
+    """PTQ a float [in, out] weight: per-output-channel symmetric int8."""
+    amax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0), 1e-8)
+    scale = amax / 127.0
+    w_q = jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8)
+    return {"w_q": w_q, "scale": scale.astype(jnp.float32)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecMode:
+    """Execution-mode switch threaded through the model."""
+
+    precision: str = "bf16"        # bf16 | w8a8
+    compute_dtype: object = DEFAULT_DTYPE
+
+    @property
+    def integer(self) -> bool:
+        return self.precision == "w8a8"
+
+
+def apply_linear(x, p, mode: ExecMode, bias: jax.Array | None = None,
+                 use_hint: tuple | None = None):
+    """Dispatch on the param leaf layout: float array vs PTQ dict {w_q, scale}.
+
+    ``use_hint``: logical spec the weight should have AT USE.  FSDP shards
+    the contraction dim in storage; without the hint GSPMD keeps it sharded
+    and all-reduces the (much larger) activation partial sums over the data
+    axis — measured 648 GB/step/device on internlm2 train_4k.  The hint
+    makes it all-gather the bf16 weight instead (ZeRO-3 semantics).
+    """
+    if isinstance(p, dict):
+        w = p["w_q"]
+        if use_hint is not None:
+            w = shard_hint(w, *([None] * (w.ndim - len(use_hint)) + list(use_hint)))
+        return linear_w8a8(x, w, p["scale"], bias, mode.compute_dtype)
+    w = p.astype(mode.compute_dtype)
+    if use_hint is not None:
+        w = shard_hint(w, *([None] * (w.ndim - len(use_hint)) + list(use_hint)))
+    return linear(x, w, bias, mode.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def norm_int(x: jax.Array, gamma: jax.Array, beta: jax.Array | None,
+             rms_only: bool) -> jax.Array:
+    """Integer-only norm (paper's ``norm`` kernel) for the w8a8 path.
+
+    Quantizes the residual stream to int8, runs the integer layernorm, and
+    dequantizes.  gamma/beta are float; they are PTQ'd to int8 payloads here
+    (cheap: per-call constant folding under jit).
+    """
+    x_q, x_s = ops.quant_rows(x.astype(jnp.float32))
+    gb_amax = jnp.maximum(jnp.max(jnp.abs(gamma)), 1e-8)
+    if beta is not None:
+        gb_amax = jnp.maximum(gb_amax, jnp.max(jnp.abs(beta)))
+    gb_s = gb_amax / 127.0
+    g_q = jnp.clip(jnp.round(gamma / gb_s), -128, 127).astype(jnp.int32)
+    b_q = (jnp.clip(jnp.round(beta / gb_s), -128, 127).astype(jnp.int32)
+           if beta is not None else jnp.zeros_like(g_q))
+    out = ops.layernorm_i8(x_q.astype(jnp.int32), g_q, b_q, rms_only=rms_only)
+    return (out.astype(jnp.float32) * (gb_s / 128.0)).astype(x.dtype)
+
+
+def apply_norm(x, p: dict, cfg, mode: ExecMode):
+    if mode.integer:
+        beta = p.get("bias") if cfg.norm_type == "layernorm" else None
+        return norm_int(x, p["scale"].astype(jnp.float32),
+                        None if beta is None else beta.astype(jnp.float32),
+                        rms_only=cfg.norm_type == "rmsnorm")
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_params(d: int, norm_type: str) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(x: jax.Array, kind: str, mode: ExecMode) -> jax.Array:
+    if mode.integer and kind == "gelu":
+        x_q, x_s = ops.quant_rows(x.astype(jnp.float32))
+        # per-row scale folded approximately: use the max row scale statically
+        # via requant on a fixed grid; here we dequant-requant with the exact
+        # integer GELU at a canonical scale.
+        s = 8.0 / 127.0  # canonical pre-activation clip range [-8, 8]
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -128, 127).astype(jnp.int32)
+        out = ops.gelu_i8(q, s)
+        from ..kernels.int_gelu import gelu_out_scale
+        return (out.astype(jnp.float32) * gelu_out_scale(s)).astype(x.dtype)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=False)
+    if kind == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, D]; positions [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_lookup(tokens: jax.Array, table: jax.Array,
+                 compute_dtype=DEFAULT_DTYPE) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0).astype(compute_dtype)
+    # residual stream: batch on dp, optional sequence parallelism on sp
+    return shard_hint(out, "dp", "sp", None)

@@ -1,0 +1,34 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (GELU) MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_hint
+from .config import ArchConfig
+from .layers import ExecMode, activation, apply_linear, dense_init
+
+
+def init_mlp_params(key, cfg: ArchConfig, d_ff: int | None = None,
+                    gated: bool | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if gated is None:
+        gated = cfg.activation == "silu"   # llama lineage uses SwiGLU
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, ff), "w_out": dense_init(ks[1], ff, d)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d, ff)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Array:
+    h = apply_linear(x, params["w_in"], mode, use_hint=(None, "tp"))
+    if "w_gate" in params:
+        g = apply_linear(x, params["w_gate"], mode, use_hint=(None, "tp"))
+        h = activation(g, cfg.activation, mode) * h
+    else:
+        h = activation(h, cfg.activation, mode)
+    h = shard_hint(h, "dp", None, "tp")  # hidden: TP region, seq gathered
+    out = apply_linear(h, params["w_out"], mode, use_hint=("tp", None))
+    return shard_hint(out, "dp", "sp", None)

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded dispatch.
+
+GShard-style static-shape dispatch (TPU-native: no dynamic shapes):
+top-k router -> per-expert positional cumsum -> one-hot dispatch tensor
+(tokens, experts, capacity) -> batched expert GEMMs -> weighted combine.
+Experts shard on the "ep" logical axis (bound to the mesh "model" axis);
+tokens stay on "dp", so dispatch/combine einsums lower to all-to-alls on
+the model axis under GSPMD.
+
+Covers Mixtral (8e top-2, no shared) and Qwen2-MoE (60e top-4 + 4 shared
+experts whose gate is a per-token sigmoid, following the HF reference).
+Router runs in fp32 even in w8a8 mode (top-k logits are precision-critical
+— same choice as ITA/PICACHU; recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_hint
+from .config import ArchConfig
+from .layers import ExecMode, activation, apply_linear, dense_init
+from .mlp import init_mlp_params, mlp
+
+F32 = jnp.float32
+
+
+def init_moe_params(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    experts = {
+        "w_in": jax.vmap(lambda k: dense_init(k, d, ff))(jax.random.split(ks[0], e)),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, ff))(jax.random.split(ks[1], e)),
+        "w_out": jax.vmap(lambda k: dense_init(k, ff, d))(jax.random.split(ks[2], e)),
+    }
+    p = {"router": {"w": dense_init(ks[3], d, e)}, "experts": experts}
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp_params(
+            ks[4], cfg, d_ff=ff * cfg.n_shared_experts, gated=True)
+        p["shared_gate"] = dense_init(jax.random.fold_in(ks[4], 1), d, 1)
+    return p
+
+
+MOE_GROUP_SIZE = 2048  # GShard group: bounds the one-hot dispatch tensor
+
+
+def _dispatch_combine(probs: jax.Array, k: int, capacity: int):
+    """probs (G, S, E) -> dispatch (G, S, E, C), combine (G, S, E, C)."""
+    g, s, e = probs.shape
+    topk_probs, topk_idx = jax.lax.top_k(probs, k)          # (G, S, k)
+    # renormalize the selected probabilities (Mixtral convention)
+    topk_probs = topk_probs / jnp.maximum(
+        jnp.sum(topk_probs, axis=-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(topk_idx, e, dtype=F32)         # (G, S, k, E)
+    # position of each (token, choice) within its expert queue (per group)
+    flat = onehot.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                   # (G, S*k, E)
+    pos = pos.reshape(g, s, k, e)
+    keep = (pos < capacity) * onehot                        # drop overflow
+    pos_c = jnp.einsum("gske,gske->gsk", pos, keep).astype(jnp.int32)
+    pos_oh = jax.nn.one_hot(pos_c, capacity, dtype=F32)     # (G, S, k, C)
+    disp = jnp.einsum("gske,gskc->gsec", keep, pos_oh)      # (G, S, E, C)
+    comb = jnp.einsum("gsec,gsk,gske->gsec", disp, topk_probs, onehot)
+    return disp, comb
+
+
+def moe(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Array:
+    b, s_len, d = x.shape
+    t = b * s_len
+    e, k = cfg.n_experts, cfg.n_experts_per_tok
+    # group tokens (GShard): the dispatch one-hot is (G, S, E, C) with S
+    # bounded, so its footprint is linear in T, and groups align with the
+    # data shards (row-major reshape keeps batch-major order)
+    sg = min(MOE_GROUP_SIZE, t)
+    while t % sg:
+        sg //= 2
+    g = t // sg
+    xg = x.reshape(g, sg, d)
+    xg = shard_hint(xg, "dp", None, None)
+    capacity = min(max(int(cfg.capacity_factor * sg * k / e), 4), sg)
+
+    logits = apply_linear(xg.astype(F32), params["router"]["w"],
+                          ExecMode("bf16", F32))            # fp32 router
+    probs = jax.nn.softmax(logits.astype(F32), axis=-1)
+    disp, comb = _dispatch_combine(probs, k, capacity)
+
+    # dispatch: (G,S,E,C) x (G,S,D) -> (E,G,C,D), experts on "ep"
+    xe = jnp.einsum("gsec,gsd->egcd", disp.astype(x.dtype), xg)
+    xe = shard_hint(xe, "ep", "dp", None, None)
+
+    def expert_ffn(p, xe_):                                 # xe_ (G, C, D)
+        h = apply_linear(xe_, p["w_in"], mode)
+        g_ = apply_linear(xe_, p["w_gate"], mode)
+        h = activation(g_, cfg.activation, mode) * h
+        return apply_linear(h, p["w_out"], mode)
+
+    ye = jax.vmap(expert_ffn, in_axes=(0, 0))(params["experts"], xe)
+    ye = shard_hint(ye, "ep", "dp", None, None)             # (E,G,C,D)
+    out = jnp.einsum("gsec,egcd->gsd", comb.astype(x.dtype), ye)
+
+    if "shared" in params:
+        gate = jax.nn.sigmoid(
+            apply_linear(xg.astype(F32), params["shared_gate"], ExecMode("bf16", F32)))
+        out = out + gate.astype(x.dtype) * mlp(params["shared"], xg, cfg, mode)
+    out = out.reshape(b, s_len, d)
+    return shard_hint(out, "dp", "sp", None)
+
+
+def moe_aux_loss(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Switch-style load-balancing loss (used by the trainer for MoE archs)."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d).astype(F32)
+    logits = xf @ params["router"]["w"].astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.n_experts_per_tok)
+    frac = jnp.mean(jax.nn.one_hot(idx, cfg.n_experts, dtype=F32), axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

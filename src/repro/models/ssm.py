@@ -1,0 +1,365 @@
+"""Recurrent blocks: Mamba-2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+All three use the chunkwise-parallel formulation where one exists:
+
+  * ``mamba2``: the SSD algorithm — intra-chunk quadratic form on the MXU,
+    inter-chunk state carried by a short ``lax.scan`` over chunks.  Training
+    sees T/chunk scan steps of dense matmuls (MXU-friendly), decode is an
+    O(1) state update.
+  * ``mlstm``: matrix-memory LSTM with exponential gating, same chunkwise
+    decomposition, log-space stabilized.
+  * ``slstm``: scalar-memory LSTM with recurrent gate weights — inherently
+    sequential (the xLSTM paper's reason for using few sLSTM blocks); a
+    ``lax.scan`` over time.
+
+Recurrences run in fp32 even in w8a8 mode: fixed-point exp-gate recurrences
+diverge over long horizons (DESIGN.md §Arch-applicability).  The in/out
+projections DO use the integer path, so the paper's technique still covers
+the FLOP-dominant parts of these blocks.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_hint
+from .config import ArchConfig
+from .layers import ExecMode, apply_linear, dense_init, rmsnorm
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    d_head = 64
+    n_heads = cfg.ssm_heads or max(d_inner // d_head, 1)
+    d_head = d_inner // n_heads
+    return d_inner, n_heads, d_head, cfg.ssm_state
+
+
+def init_mamba2_params(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_inner, n_heads, d_head, d_state = _mamba_dims(cfg)
+    conv_ch = d_inner + 2 * d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * d_state + n_heads),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, 1, conv_ch), F32)
+                   * (1.0 / math.sqrt(cfg.ssm_conv))),
+        "conv_b": jnp.zeros((conv_ch,), F32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(F32)),
+        "D": jnp.ones((n_heads,), F32),
+        "dt_bias": jnp.zeros((n_heads,), F32) + jnp.log(jnp.e - 1),  # softplus^-1(1)
+        "norm_scale": jnp.ones((d_inner,), F32),
+        "out_proj": dense_init(ks[2], d_inner, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None):
+    """Depthwise causal conv1d.  x (B,T,C), w (K,1,C).  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, T+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i, 0] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD scan.  xh (B,T,H,P), dt (B,T,H), A (H,) neg, Bm/Cm (B,T,N).
+
+    Returns y (B,T,H,P) and the final state (B,H,N,P).
+    """
+    b, t, h, p = xh.shape
+    n = Bm.shape[-1]
+    nc = t // chunk
+    xc = xh.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = Bm.reshape(b, nc, chunk, n)
+    cc = Cm.reshape(b, nc, chunk, n)
+
+    a = dtc * A                                             # (B,NC,L,H) <= 0
+    cum = jnp.cumsum(a, axis=2)                             # within-chunk cumsum
+
+    # intra-chunk: y[t] = sum_{s<=t} C_t.B_s exp(cum_t - cum_s) dt_s x_s
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    cb = jnp.einsum("bcln,bcsn->bcls", cc, bc)              # (B,NC,L,S)
+    # mask the EXPONENT: exp of the (positive) upper triangle would be inf
+    # and poison the VJP through the where
+    dexp = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,NC,L,S,H)
+    dexp = jnp.where(mask[None, None, :, :, None], dexp, -1e30)
+    decay = jnp.exp(dexp)
+    y_intra = jnp.einsum("bcls,bclsh,bcsh,bcshp->bclhp",
+                         cb, decay, dtc, xc)
+
+    # chunk states: h_c = sum_s exp(cum_end - cum_s) dt_s B_s x_s^T
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,NC,L,H)
+    states = jnp.einsum("bclh,bclh,bcln,bclhp->bchnp",
+                        dec_end, dtc, bc, xc)               # per-chunk state
+
+    # inter-chunk recurrence over chunk axis
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))               # (B,NC,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                       # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                   # emit PREVIOUS state
+
+    init = jnp.zeros((b, h, n, p), F32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,NC,H,N,P)
+
+    # inter-chunk contribution: y[t] += C_t exp(cum_t) H_{c-1}
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp",
+                         cc, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y, final
+
+
+def mamba2(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode,
+           state: dict | None = None, chunk: int = 128):
+    """Mamba-2 block.  state holds {"conv": (B,K-1,C), "ssd": (B,H,N,P)}."""
+    b, t, d = x.shape
+    d_inner, n_heads, d_head, d_state = _mamba_dims(cfg)
+    zxbcdt = apply_linear(x, params["in_proj"], mode).astype(F32)
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+                 2 * d_inner + 2 * d_state], axis=-1)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"],
+        None if state is None else state["conv"])
+    xr, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])            # (B,T,H)
+    A = -jnp.exp(params["A_log"])                           # (H,) negative
+    xh = xr.reshape(b, t, n_heads, d_head)
+
+    if state is not None and t == 1:
+        # decode: one-step state update
+        h0 = state["ssd"]                                   # (B,H,N,P)
+        da = jnp.exp(dt[:, 0] * A)                          # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0], Bm[:, 0], xh[:, 0])
+        h1 = h0 * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], h1)[:, None]  # (B,1,H,P)
+        y = y.reshape(b, 1, n_heads, d_head)
+        new_state = {"conv": conv_state, "ssd": h1}
+    else:
+        pad = (-t) % chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, final = _ssd_chunked(xh, dt, A, Bm, Cm, min(chunk, xh.shape[1]))
+        y = y[:, :t]
+        new_state = {"conv": conv_state, "ssd": final}
+
+    y = y + params["D"][None, None, :, None] * xh[:, :t].reshape(b, t, n_heads, d_head)
+    y = y.reshape(b, t, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = apply_linear(y.astype(x.dtype), params["out_proj"], mode)
+    return shard_hint(out, "dp", "sp", None), new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunkwise) and sLSTM (scalar memory, scan)
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ArchConfig):
+    """xLSTM mLSTM block: 2x pre-up-projection (arXiv:2405.04517 Fig. 10)."""
+    d_up = 2 * cfg.d_model
+    nh = cfg.n_heads
+    hd = d_up // nh
+    return d_up, nh, hd
+
+
+def init_mlstm_params(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_up, nh, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[6], d, d_up),        # mLSTM branch
+        "w_gate": dense_init(ks[7], d, d_up),      # swish gate branch
+        "wq": dense_init(ks[0], d_up, nh * hd),
+        "wk": dense_init(ks[1], d_up, nh * hd),
+        "wv": dense_init(ks[2], d_up, nh * hd),
+        "w_if": dense_init(ks[3], d_up, 2 * nh),   # input & forget gates
+        "norm_scale": jnp.ones((nh * hd,), F32),
+        "wo": dense_init(ks[5], d_up, d),
+    }
+
+
+def _mlstm_chunked(q, k, v, ig, fg, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q/k/v (B,T,H,D); ig/fg raw gate pre-activations (B,T,H).
+    Returns y (B,T,H,D) and final (C (B,H,D,D), n (B,H,D), m (B,H)).
+    """
+    b, t, h, dh = q.shape
+    nc = t // chunk
+    lf = jax.nn.log_sigmoid(fg)                             # log f_t <= 0
+    qc = q.reshape(b, nc, chunk, h, dh)
+    kc = k.reshape(b, nc, chunk, h, dh) / math.sqrt(dh)
+    vc = v.reshape(b, nc, chunk, h, dh)
+    igc = ig.reshape(b, nc, chunk, h)
+    lfc = lf.reshape(b, nc, chunk, h)
+    bcum = jnp.cumsum(lfc, axis=2)                          # (B,NC,L,H)
+    bsum = bcum[:, :, -1, :]                                # (B,NC,H)
+
+    # intra-chunk log weights: D[t,s] = bcum_t - bcum_s + ig_s  (s <= t)
+    dmat = (bcum[:, :, :, None, :] - bcum[:, :, None, :, :]
+            + igc[:, :, None, :, :])                        # (B,NC,L,S,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(mask[None, None, :, :, None], dmat, -jnp.inf)
+    m_intra = jnp.max(dmat, axis=3)                         # (B,NC,L,H)
+
+    # inter-chunk scan: carry (C, n, m)
+    # per-chunk inputs for the state update: sum_s exp(bsum - bcum_s + ig_s) k v^T
+    g_in = bsum[:, :, None, :] - bcum + igc                 # (B,NC,L,H)
+
+    def scan_fn(carry, inp):
+        C, n, m = carry                                     # (B,H,D,D),(B,H,D),(B,H)
+        kcs, vcs, g, bs = inp    # (B,L,H,D),(B,L,H,D),(B,L,H),(B,H)
+        m_new = jnp.maximum(m + bs, jnp.max(g, axis=1))     # (B,H)
+        scale_old = jnp.exp(m + bs - m_new)                 # (B,H)
+        w = jnp.exp(g - m_new[:, None, :])                  # (B,L,H)
+        C_new = (C * scale_old[..., None, None]
+                 + jnp.einsum("blh,blhd,blhe->bhde", w, kcs, vcs))
+        n_new = n * scale_old[..., None] + jnp.einsum("blh,blhd->bhd", w, kcs)
+        return (C_new, n_new, m_new), (C, n, m)             # emit PREVIOUS
+
+    init = (jnp.zeros((b, h, dh, dh), F32), jnp.zeros((b, h, dh), F32),
+            jnp.full((b, h), -1e30, F32))
+    final, prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.moveaxis(g_in, 1, 0), jnp.moveaxis(bsum, 1, 0)))
+    Cp, np_, mp = (jnp.moveaxis(p, 0, 1) for p in prev)     # (B,NC,...)
+
+    # combine intra + inter with a joint stabilizer
+    m_inter = bcum + mp[:, :, None, :]                      # (B,NC,L,H)
+    m_tot = jnp.maximum(m_intra, m_inter)
+    m_tot = jnp.maximum(m_tot, -1e30)
+    w_intra = jnp.exp(dmat - m_tot[:, :, :, None, :])       # (B,NC,L,S,H)
+    qk = jnp.einsum("bclhd,bcshd->bclsh", qc, kc)
+    num_intra = jnp.einsum("bclsh,bclsh,bcshe->bclhe", qk, w_intra, vc)
+    den_intra = jnp.einsum("bclsh,bclsh->bclh", qk, w_intra)
+
+    w_inter = jnp.exp(m_inter - m_tot)                      # (B,NC,L,H)
+    qC = jnp.einsum("bclhd,bchde->bclhe", qc, Cp)
+    qn = jnp.einsum("bclhd,bchd->bclh", qc, np_)
+    num = num_intra + w_inter[..., None] * qC
+    den = den_intra + w_inter * qn
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))        # xLSTM denominator
+    y = (num / den[..., None]).reshape(b, t, h, dh)
+    return y, (final[0], final[1], final[2])
+
+
+def mlstm(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode,
+          state: dict | None = None, chunk: int = 64):
+    b, t, d = x.shape
+    d_up, nh, hd = _mlstm_dims(cfg)
+    u = apply_linear(x, params["w_up"], mode)               # (B,T,2d)
+    q = apply_linear(u, params["wq"], mode).astype(F32).reshape(b, t, nh, hd)
+    k = apply_linear(u, params["wk"], mode).astype(F32).reshape(b, t, nh, hd)
+    v = apply_linear(u, params["wv"], mode).astype(F32).reshape(b, t, nh, hd)
+    gates = apply_linear(u, params["w_if"], mode).astype(F32).reshape(b, t, nh, 2)
+    ig, fg = gates[..., 0], gates[..., 1]
+
+    if state is not None and t == 1:
+        C, n, m = state["C"], state["n"], state["m"]
+        lf = jax.nn.log_sigmoid(fg[:, 0])                   # (B,H)
+        m_new = jnp.maximum(lf + m, ig[:, 0])
+        i_w = jnp.exp(ig[:, 0] - m_new)
+        f_w = jnp.exp(lf + m - m_new)
+        kd = k[:, 0] / math.sqrt(hd)
+        C1 = C * f_w[..., None, None] + jnp.einsum(
+            "bh,bhd,bhe->bhde", i_w, kd, v[:, 0])
+        n1 = n * f_w[..., None] + i_w[..., None] * kd
+        num = jnp.einsum("bhd,bhde->bhe", q[:, 0], C1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, 0], n1)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]                 # (B,1,H,D)
+        new_state = {"C": C1, "n": n1, "m": m_new}
+    else:
+        pad = (-t) % chunk
+        if pad:
+            q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                       for a in (q, k, v))
+            ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)))
+            fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+        y, (C, n, m) = _mlstm_chunked(q, k, v, ig, fg, min(chunk, q.shape[1]))
+        y = y[:, :t]
+        new_state = {"C": C, "n": n, "m": m}
+
+    g = jax.nn.silu(apply_linear(x, params["w_gate"], mode).astype(F32))
+    y = y.reshape(b, t, nh * hd)
+    y = rmsnorm(y, params["norm_scale"], cfg.norm_eps) * g
+    out = apply_linear(y.astype(x.dtype), params["wo"], mode)
+    return shard_hint(out, "dp", "sp", None), new_state
+
+
+def init_slstm_params(key, cfg: ArchConfig) -> dict:
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for gates (i, f, z, o), concatenated
+        "w_in": dense_init(ks[0], d, 4 * d),
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "r_w": (jax.random.normal(ks[1], (nh, hd, 4 * hd), F32)
+                / math.sqrt(hd)),
+        "norm_scale": jnp.ones((d,), F32),
+        "wo": dense_init(ks[2], d, d),
+    }
+
+
+def slstm(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode,
+          state: dict | None = None):
+    """Scalar-memory xLSTM with recurrent gating — sequential scan over T."""
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    zi = apply_linear(x, params["w_in"], mode).astype(F32)  # (B,T,4d)
+
+    if state is None:
+        h0 = jnp.zeros((b, nh, hd), F32)
+        c0 = jnp.zeros((b, nh, hd), F32)
+        n0 = jnp.ones((b, nh, hd), F32)
+        m0 = jnp.zeros((b, nh, hd), F32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+
+    def step(carry, z_t):
+        h, c, n, m = carry                                  # (B,H,hd)
+        rec = jnp.einsum("bhd,hde->bhe", h, params["r_w"])  # (B,H,4hd)
+        g = z_t.reshape(b, nh, 4 * hd) + rec
+        i_r, f_r, z_r, o_r = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(f_r + m, i_r)
+        i_w = jnp.exp(i_r - m_new)
+        f_w = jnp.exp(f_r + m - m_new)
+        c_new = f_w * c + i_w * jnp.tanh(z_r)
+        n_new = f_w * n + i_w
+        h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), ys = jax.lax.scan(step, (h0, c0, n0, m0),
+                                    jnp.moveaxis(zi, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, d)
+    y = rmsnorm(y.astype(x.dtype), params["norm_scale"], cfg.norm_eps)
+    out = apply_linear(y, params["wo"], mode)
+    new_state = {"h": h, "c": c, "n": n, "m": m}
+    return shard_hint(out, "dp", "sp", None), new_state

@@ -1,0 +1,2 @@
+"""Quantization substrate: PTQ to the W8A8 integer execution mode."""
+from .ptq import ptq_quantize_params, quantized_param_fraction  # noqa: F401

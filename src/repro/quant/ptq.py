@@ -1,0 +1,77 @@
+"""Post-training quantization: float params -> W8A8 integer execution.
+
+Symmetric per-output-channel int8 for every 2D+ projection weight the
+integer path consumes; norms/gates/recurrences stay float (see DESIGN.md
+§Arch-applicability).  Quantized leaves are replaced by {"w_q", "scale"}
+dicts, which ``layers.apply_linear`` dispatches on — no model code changes.
+
+Selection mirrors the sharding rules: the same path patterns that make a
+weight TP-shardable make it quantizable (they are the GEMM weights).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+_QUANT_PATTERNS = [
+    r"/w(q|k|v|o)$",
+    r"/w_(in|gate|out)$",
+    r"/(in_proj|out_proj|w_if|wo_gate|w_in)$",
+    r"(^|/)unembed$",
+]
+# recurrent / precision-critical exclusions (router, gates handled by name)
+_EXCLUDE = [r"/router/", r"/r_w$", r"/conv_w$", r"/shared_gate$"]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def _should_quantize(path: str, x) -> bool:
+    if not hasattr(x, "ndim") or x.ndim < 2:
+        return False
+    if any(re.search(p, path) for p in _EXCLUDE):
+        return False
+    return any(re.search(p, path) for p in _QUANT_PATTERNS)
+
+
+def _quantize_leaf(w: jax.Array) -> dict:
+    wf = w.astype(jnp.float32)
+    # per-output-channel (last dim) symmetric absmax; leading dims (layer
+    # stacks / experts) keep their own channel scales via reduction over the
+    # input dim only (axis=-2)
+    amax = jnp.maximum(jnp.max(jnp.abs(wf), axis=-2, keepdims=True), 1e-8)
+    scale = amax / 127.0
+    w_q = jnp.clip(jnp.round(wf / scale), -128, 127).astype(jnp.int8)
+    return {"w_q": w_q, "scale": jnp.squeeze(scale, axis=-2).astype(jnp.float32)}
+
+
+def ptq_quantize_params(params):
+    """Return a new param tree with GEMM weights PTQ'd to int8."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = []
+    for path, x in flat:
+        if _should_quantize(_path_str(path), x):
+            leaves.append(_quantize_leaf(x))
+        else:
+            leaves.append(x)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def quantized_param_fraction(params) -> float:
+    """Fraction of parameter *elements* on the int8 path (works on either a
+    float tree — predictive — or a PTQ'd tree — actual)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    q = tot = 0
+    for path, x in flat:
+        p = _path_str(path)
+        tot += x.size
+        if p.endswith("/w_q") or _should_quantize(p, x):
+            q += x.size
+    return q / max(tot, 1)

@@ -1,0 +1,2 @@
+"""Serving substrate: prefill/decode engine with batched request scheduling."""
+from .engine import ServeConfig, ServingEngine, prefill_step, decode_step  # noqa: F401

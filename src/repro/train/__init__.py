@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, trainer loop, checkpointing."""
+from .checkpoint import CheckpointManager  # noqa: F401
+from .optimizer import AdamWConfig, adamw_update, init_opt_state  # noqa: F401
+from .trainer import TrainConfig, Trainer, make_train_step  # noqa: F401

@@ -1,0 +1,61 @@
+"""HLO analyzer unit tests on synthetic HLO text (the roofline's foundation)."""
+from repro.launch.hlo_analysis import HloModule, _bytes_of, _shapes_in
+
+SYNTH = """
+HloModule jit_step
+
+%add.clone (x.1: f32[], y.1: f32[]) -> f32[] {
+  %x.1 = f32[] parameter(0)
+  ROOT %add.2 = f32[] add(%x.1, %y.1)
+}
+
+%body (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[16,16]<=[256], to_apply=%add.clone
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond (arg: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %c24 = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i2, %c24), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %init = (s32[], f32[8,16]) tuple(%a, %a)
+  %wh = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"24"}}
+  %ag = f32[8,256]{1,0} all-gather(%a), replica_groups=[16,16]<=[256], dimensions={1}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_type_parsing():
+    assert _shapes_in("f32[8,16]") == [("f32", [8, 16])]
+    assert _bytes_of("f32[8,16]") == 8 * 16 * 4
+    assert _bytes_of("(s32[], f32[8,16])") == 4 + 512
+    assert _bytes_of("bf16[2,3]{1,0}") == 12
+
+
+def test_loop_corrected_flops_and_collectives():
+    m = HloModule(SYNTH)
+    s = m.stats()
+    # dot: 2*8*16*16 flops, x24 trips
+    assert s.flops == 24 * 2 * 8 * 16 * 16
+    # all-reduce inside the loop (512 B x24) + one all-gather (8*256*4 B)
+    assert s.coll_counts["all-reduce"] == 24
+    assert s.coll_counts["all-gather"] == 1
+    assert s.coll_bytes == 24 * 512 + 8 * 256 * 4
+
+
+def test_trip_count_fallback_from_condition():
+    # strip the backend_config annotation -> falls back to the compare const
+    text = SYNTH.replace(', backend_config={"known_trip_count":{"n":"24"}}', "")
+    m = HloModule(text)
+    assert m.stats().flops == 24 * 2 * 8 * 16 * 16

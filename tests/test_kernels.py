@@ -1,0 +1,269 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles.
+
+Integer kernels must be BIT-EXACT against their jnp oracle; the float flash
+attention matches to fp32 tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import inumerics as inum
+from repro.kernels import ops, ref
+from repro.kernels.common import set_interpret
+
+
+@pytest.fixture(autouse=True)
+def _pallas_backend():
+    ops.set_backend("pallas")
+    set_interpret(True)
+    yield
+    ops.set_backend("jnp")
+
+
+def _rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-127, 128, size=shape), jnp.int8)
+
+
+class TestInt8Gemm:
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 16, 8), (37, 200, 130), (128, 128, 128), (64, 384, 256),
+        (200, 64, 520),
+    ])
+    def test_exact_vs_ref(self, rng, m, k, n):
+        x = _rand_i8(rng, (m, k))
+        w = _rand_i8(rng, (k, n))
+        assert (ops.gemm_i8(x, w) == ref.int8_gemm_ref(x, w)).all()
+
+    @pytest.mark.parametrize("mult", [1e-4, 3e-3, 0.05])
+    def test_requant_epilogue_exact(self, rng, mult):
+        x = _rand_i8(rng, (32, 96))
+        w = _rand_i8(rng, (96, 72))
+        rq = inum.compute_requant_params(mult, 96 * 127 * 127)
+        assert (ops.gemm_i8(x, w, requant=rq)
+                == ref.int8_gemm_ref(x, w, requant=rq)).all()
+
+    def test_batched_lead_dims(self, rng):
+        x = _rand_i8(rng, (2, 5, 40))
+        w = _rand_i8(rng, (40, 24))
+        got = ops.gemm_i8(x, w)
+        assert got.shape == (2, 5, 24)
+        assert (got == ref.int8_gemm_ref(x.reshape(-1, 40), w).reshape(2, 5, 24)).all()
+
+
+class TestIntSoftmax:
+    @pytest.mark.parametrize("rows,cols", [(8, 64), (5, 77), (16, 512), (1, 33)])
+    @pytest.mark.parametrize("scale", [0.02, 0.08])
+    def test_exact_vs_ref(self, rng, rows, cols, scale):
+        x = jnp.asarray(rng.integers(-127, 128, (rows, cols)), jnp.int32)
+        assert (ops.softmax_i8(x, scale) == ref.int_softmax_ref(x, scale)).all()
+
+    def test_masked_exact(self, rng):
+        x = jnp.asarray(rng.integers(-127, 128, (6, 96)), jnp.int32)
+        mask = jnp.asarray(rng.random((6, 96)) > 0.2)
+        assert (ops.softmax_i8(x, 0.05, mask=mask)
+                == ref.int_softmax_ref(x, 0.05, mask)).all()
+
+
+class TestIntLayerNorm:
+    @pytest.mark.parametrize("d", [64, 256, 1000])
+    @pytest.mark.parametrize("rms", [False, True])
+    def test_exact_vs_ref(self, rng, d, rms):
+        x = jnp.asarray(rng.integers(-127, 128, (9, d)), jnp.int32)
+        g = jnp.asarray(rng.integers(32, 127, (d,)), jnp.int32)
+        b = jnp.asarray(rng.integers(-50, 50, (d,)), jnp.int32)
+        assert (ops.layernorm_i8(x, g, b, rms_only=rms)
+                == ref.int_layernorm_ref(x, g, b, rms_only=rms)).all()
+
+
+class TestIntGelu:
+    @pytest.mark.parametrize("shape", [(7, 100), (8, 128), (3, 5, 64)])
+    def test_exact_vs_ref(self, rng, shape):
+        x = jnp.asarray(rng.integers(-127, 128, shape), jnp.int32)
+        assert (ops.gelu_i8(x, 0.05) == ref.int_gelu_ref(x, 0.05)).all()
+
+
+class TestQuantize:
+    def test_rows_exact(self, rng):
+        x = jnp.asarray(rng.normal(size=(6, 200)), jnp.float32)
+        (q1, s1) = ops.quant_rows(x)
+        (q2, s2) = ref.quantize_rows_ref(x)
+        assert (q1 == q2).all() and np.allclose(s1, s2)
+
+    def test_requant_exact(self, rng):
+        x = jnp.asarray(rng.integers(-2 ** 20, 2 ** 20, (6, 64)), jnp.int32)
+        rq = inum.compute_requant_params(1e-3, 2 ** 20)
+        assert (ops.requant(x, rq) == ref.requantize_i32_ref(x, rq)).all()
+
+    def test_quant_dequant_roundtrip_error(self, rng):
+        x = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
+        q, s = ops.quant_rows(x)
+        err = jnp.abs(q.astype(jnp.float32) * s - x)
+        assert float(err.max()) <= float(s.max()) * 0.5 + 1e-6
+
+
+class TestConv2d:
+    @pytest.mark.parametrize("hw,cin,cout,k", [
+        (16, 3, 8, 3), (12, 4, 16, 3), (8, 1, 4, 1),
+    ])
+    def test_exact_vs_ref(self, rng, hw, cin, cout, k):
+        x = _rand_i8(rng, (2, hw, hw, cin))
+        w = _rand_i8(rng, (k, k, cin, cout))
+        b = jnp.asarray(rng.integers(-1000, 1000, (cout,)), jnp.int32)
+        assert (ops.conv2d_i8(x, w, b) == ref.int8_conv2d_ref(x, w, b)).all()
+
+    def test_requant_output(self, rng):
+        x = _rand_i8(rng, (1, 10, 10, 3))
+        w = _rand_i8(rng, (3, 3, 3, 8))
+        b = jnp.asarray(rng.integers(-100, 100, (8,)), jnp.int32)
+        rq = inum.compute_requant_params(1e-4, 27 * 127 * 127 + 100)
+        got = ops.conv2d_i8(x, w, b, rq)
+        assert got.dtype == jnp.int8
+        assert (got == ref.int8_conv2d_ref(x, w, b, rq)).all()
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,d,hq,hkv", [
+        (64, 32, 4, 2), (128, 64, 8, 8), (256, 32, 4, 1),
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_close_vs_ref(self, rng, s, d, hq, hkv, causal):
+        q = jnp.asarray(rng.normal(size=(2, hq, s, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, hkv, s, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, hkv, s, d)), jnp.float32)
+        got = ops.attention(q, k, v, causal=causal)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestInt8FlashAttention:
+    @pytest.mark.parametrize("s,d,hq,hkv", [(64, 32, 2, 1), (128, 64, 4, 4)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_exact_vs_ref(self, rng, s, d, hq, hkv, causal):
+        q = _rand_i8(rng, (1, hq, s, d))
+        k = _rand_i8(rng, (1, hkv, s, d))
+        v = _rand_i8(rng, (1, hkv, s, d))
+        got = ops.attention_i8(q, k, v, scale=0.002, causal=causal)
+        want = ref.int8_flash_attention_ref(q, k, v, scale=0.002, causal=causal)
+        assert (got == want).all()
+
+    def test_close_to_float_attention(self, rng):
+        """Integer attention approximates float attention over the SAME
+        (dequantized) inputs — isolates the i-softmax/int8-prob error from
+        the unavoidable input-quantization error (which dominates at
+        coarse scales: delta_score ~ 0.25 logits at scale 1/16)."""
+        s, d, h = 64, 32, 2
+        qf = rng.normal(size=(1, h, s, d)).astype(np.float32)
+        kf = rng.normal(size=(1, h, s, d)).astype(np.float32)
+        vf = rng.normal(size=(1, h, s, d)).astype(np.float32)
+        sc = 1.0 / 16.0
+        q = jnp.asarray(np.clip(np.round(qf / sc), -128, 127), jnp.int8)
+        k = jnp.asarray(np.clip(np.round(kf / sc), -128, 127), jnp.int8)
+        # per-TENSOR v scale: the kernel contract is acc * (1/127) * s_v —
+        # per-token scales must be folded inside the kernel (future work)
+        vs = np.abs(vf).max() / 127.0
+        v = jnp.asarray(np.clip(np.round(vf / vs), -128, 127), jnp.int8)
+        import math
+        rshift = int(round(math.log2(math.sqrt(d))))
+        s_score = sc * sc * (2.0 ** rshift) / math.sqrt(d)
+        acc = ops.attention_i8(q, k, v, scale=s_score, causal=True)
+        got = np.asarray(acc, np.float32) / 127.0 * vs
+        # oracle: float attention over the dequantized int8 inputs
+        want = np.asarray(ref.flash_attention_ref(
+            q.astype(jnp.float32) * sc, k.astype(jnp.float32) * sc,
+            v.astype(jnp.float32) * vs, causal=True))
+        assert np.abs(got - want).max() < 0.12
+
+
+class TestInt8KVDecodeAttention:
+    """Decode attention over the int8 ring cache (§Perf cell-C kernel)."""
+
+    def _mk(self, rng, b, s, hq, hkv, d, fill, window=0):
+        from repro.kernels.int8_kv_decode_attention import int8_kv_decode_attention
+        q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+        kf = rng.normal(size=(b, s, hkv, d)).astype(np.float32)
+        vf = rng.normal(size=(b, s, hkv, d)).astype(np.float32)
+        ks = np.abs(kf).max(-1, keepdims=True) / 127.0 + 1e-8
+        vs = np.abs(vf).max(-1, keepdims=True) / 127.0 + 1e-8
+        kq = jnp.asarray(np.clip(np.round(kf / ks), -128, 127), jnp.int8)
+        vq = jnp.asarray(np.clip(np.round(vf / vs), -128, 127), jnp.int8)
+        pos = np.full((b, s), -1, np.int32)
+        pos[:, :fill] = np.arange(fill)
+        qpos = jnp.full((b,), fill - 1, jnp.int32)
+        args = (q, kq, jnp.asarray(ks), vq, jnp.asarray(vs),
+                jnp.asarray(pos), qpos)
+        return int8_kv_decode_attention, args
+
+    @pytest.mark.parametrize("s,hq,hkv,d,fill", [
+        (128, 4, 2, 64, 128), (256, 8, 8, 32, 100), (128, 6, 1, 64, 17),
+    ])
+    def test_matches_ref(self, rng, s, hq, hkv, d, fill):
+        fn, args = self._mk(rng, 2, s, hq, hkv, d, fill)
+        got = fn(*args, bk=64)
+        want = ref.int8_kv_decode_attention_ref(*args)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_sliding_window(self, rng):
+        fn, args = self._mk(rng, 1, 128, 4, 2, 32, 128, window=32)
+        got = fn(*args, window=32, bk=64)
+        want = ref.int8_kv_decode_attention_ref(*args, window=32)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_empty_slots_excluded(self, rng):
+        """Slots with pos_ids == -1 must contribute zero probability."""
+        fn, args = self._mk(rng, 1, 128, 2, 2, 32, 5)
+        got = np.asarray(fn(*args, bk=64), np.float32)
+        want = np.asarray(ref.int8_kv_decode_attention_ref(*args), np.float32)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestSSDScan:
+    """Chunked Mamba-2 SSD kernel vs the sequential-recurrence oracle."""
+
+    @pytest.mark.parametrize("t,n,p,chunk", [
+        (128, 16, 32, 64), (256, 64, 64, 128), (64, 8, 16, 32),
+    ])
+    def test_matches_sequential_recurrence(self, rng, t, n, p, chunk):
+        from repro.kernels.ssd_scan import ssd_scan
+        bh = 3
+        x = jnp.asarray(rng.normal(size=(bh, t, p)), jnp.float32)
+        dt = jnp.asarray(np.abs(rng.normal(size=(bh, t))) * 0.5 + 0.01,
+                         jnp.float32)
+        b = jnp.asarray(rng.normal(size=(bh, t, n)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(bh, t, n)), jnp.float32)
+        a = jnp.asarray(-np.abs(rng.normal(size=(bh, 1))) - 0.1, jnp.float32)
+        got = ssd_scan(x, dt, b, c, a, chunk=chunk)
+        want = ref.ssd_scan_ref(x, dt, b, c, a)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_matches_model_ssd(self, rng):
+        """Consistency with the model substrate's chunked-jnp SSD."""
+        from repro.kernels.ssd_scan import ssd_scan
+        from repro.models.ssm import _ssd_chunked
+        bsz, t, h, p, n = 2, 128, 2, 32, 16
+        xh = jnp.asarray(rng.normal(size=(bsz, t, h, p)), jnp.float32)
+        dt = jnp.asarray(np.abs(rng.normal(size=(bsz, t, h))) * 0.5 + 0.01,
+                         jnp.float32)
+        a = jnp.asarray(-np.abs(rng.normal(size=(h,))) - 0.1, jnp.float32)
+        bm = jnp.asarray(rng.normal(size=(bsz, t, n)), jnp.float32)
+        cm = jnp.asarray(rng.normal(size=(bsz, t, n)), jnp.float32)
+        y_model, _ = _ssd_chunked(xh, dt, a, bm, cm, chunk=64)
+        # kernel layout: fold (B, H) and pre-scale x by nothing; B/C shared
+        # across heads in the model -> broadcast
+        xk = jnp.transpose(xh, (0, 2, 1, 3)).reshape(bsz * h, t, p)
+        dtk = jnp.transpose(dt, (0, 2, 1)).reshape(bsz * h, t)
+        bk = jnp.broadcast_to(bm[:, None], (bsz, h, t, n)).reshape(bsz * h, t, n)
+        ck = jnp.broadcast_to(cm[:, None], (bsz, h, t, n)).reshape(bsz * h, t, n)
+        ak = jnp.broadcast_to(a[None, :, None], (bsz, h, 1)).reshape(bsz * h, 1)
+        # model applies dt INSIDE the update on x as well: dt_j B_j (dt x)_j?
+        # no — model: h += dt_j B_j x_j with y = C.h; kernel identical
+        y_k = ssd_scan(xk, dtk, bk, ck, ak, chunk=64)
+        y_k = jnp.transpose(y_k.reshape(bsz, h, t, p), (0, 2, 1, 3))
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_model),
+                                   rtol=3e-4, atol=3e-4)

@@ -1,0 +1,201 @@
+"""End-to-end system behaviour: training convergence, fault tolerance,
+data determinism, serving engine, compression, sharding rules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, TokenPipeline, batch_for_step
+from repro.dist.compression import (
+    compress_grads,
+    decompress_grads,
+    init_error_state,
+)
+from repro.dist.sharding import AxisEnv, param_specs, set_axis_env
+from repro.models import init_params
+from repro.serve import ServeConfig, ServingEngine
+from repro.train import (
+    AdamWConfig,
+    CheckpointManager,
+    TrainConfig,
+    Trainer,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestData:
+    def test_restart_exact(self):
+        cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=4, seed=3)
+        a = batch_for_step(cfg, 17)
+        b = batch_for_step(cfg, 17)
+        assert (a["tokens"] == b["tokens"]).all()
+        c = batch_for_step(cfg, 18)
+        assert not (a["tokens"] == c["tokens"]).all()
+
+    def test_host_sharding_disjoint(self):
+        k = dict(vocab_size=512, seq_len=16, global_batch=8, seed=1, n_hosts=2)
+        a = batch_for_step(DataConfig(host_index=0, **k), 5)
+        b = batch_for_step(DataConfig(host_index=1, **k), 5)
+        assert a["tokens"].shape[0] == 4
+        assert not (a["tokens"] == b["tokens"]).all()
+
+    def test_pipeline_prefetch_order(self):
+        cfg = DataConfig(vocab_size=128, seq_len=8, global_batch=2)
+        pipe = TokenPipeline(cfg)
+        b0 = next(pipe)
+        b1 = next(pipe)
+        pipe.close()
+        assert (b0["tokens"] == batch_for_step(cfg, 0)["tokens"]).all()
+        assert (b1["tokens"] == batch_for_step(cfg, 1)["tokens"]).all()
+
+
+class TestTraining:
+    def _small(self):
+        cfg = get_config("codeqwen1.5-7b", reduced=True)
+        params = init_params(KEY, cfg)
+        tc = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=5,
+                                               total_steps=50),
+                         log_every=1000, checkpoint_every=10_000)
+        return cfg, params, tc
+
+    def test_loss_decreases(self):
+        cfg, params, tc = self._small()
+        tr = Trainer(cfg, tc, params)
+        data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                        global_batch=8))
+        hist = tr.run(data, 25)
+        data.close()
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_checkpoint_restart_bitexact_params(self):
+        cfg, params, tc = self._small()
+        with tempfile.TemporaryDirectory() as d:
+            ck = CheckpointManager(d, keep=2)
+            tr = Trainer(cfg, tc, params, ckpt_manager=ck)
+            data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                            seq_len=32, global_batch=8))
+            tr.run(data, 5)
+            data.close()
+            step = ck.latest_step()
+            p2, o2, meta = ck.restore(step, tr.params, tr.opt_state)
+            assert meta["step"] == step
+            for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(p2)):
+                assert (np.asarray(a) == np.asarray(b)).all()
+
+    def test_checkpoint_keep_k_gc(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = CheckpointManager(d, keep=2)
+            params = {"w": jnp.ones((4, 4))}
+            for s in (1, 2, 3, 4):
+                ck.save(s, params, blocking=True)
+            assert ck.steps() == [3, 4]
+
+    def test_grad_accumulation_equivalence(self):
+        """accum_steps=2 over 2B == accum_steps=1 over the same 2B batch."""
+        cfg, params, _ = self._small()
+        from repro.train.trainer import make_train_step
+        from repro.train.optimizer import init_opt_state
+        batch = {
+            "tokens": jax.random.randint(KEY, (8, 32), 0, cfg.vocab_size),
+            "labels": jax.random.randint(KEY, (8, 32), 0, cfg.vocab_size),
+        }
+        tc1 = TrainConfig(optimizer=AdamWConfig(lr=1e-3), accum_steps=1)
+        tc2 = TrainConfig(optimizer=AdamWConfig(lr=1e-3), accum_steps=2)
+        p1, _, _, m1 = jax.jit(make_train_step(cfg, tc1))(
+            params, init_opt_state(params), None, batch)
+        p2, _, _, m2 = jax.jit(make_train_step(cfg, tc2))(
+            params, init_opt_state(params), None, batch)
+        # same data -> same loss (mean over microbatches) & near-same update
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-2
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert d < 5e-2
+
+    def test_straggler_watchdog(self):
+        from repro.train.trainer import Watchdog
+        wd = Watchdog(factor=3.0)
+        for _ in range(10):
+            wd.observe(0.1)
+        assert wd.observe(1.0) is True
+        assert wd.flagged == 1
+
+
+class TestCompression:
+    def test_error_feedback_reduces_bias(self):
+        rng = np.random.default_rng(0)
+        g = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
+        err = init_error_state(g)
+        acc_plain = np.zeros((64, 64), np.float32)
+        acc_ef = np.zeros((64, 64), np.float32)
+        total = np.zeros((64, 64), np.float32)
+        for i in range(20):
+            gi = {"w": g["w"] * (1 + 0.01 * i)}
+            total += np.asarray(gi["w"])
+            payload, err = compress_grads(gi, err)
+            acc_ef += np.asarray(decompress_grads(payload)["w"])
+            p2, _ = compress_grads(gi, init_error_state(g))
+            acc_plain += np.asarray(decompress_grads(p2)["w"])
+        # with error feedback the accumulated sum tracks the true sum better
+        assert (np.abs(acc_ef - total).mean()
+                <= np.abs(acc_plain - total).mean() + 1e-6)
+
+    def test_wire_payload_is_int8(self):
+        g = {"w": jnp.ones((8, 8), jnp.float32)}
+        payload, _ = compress_grads(g, init_error_state(g))
+        assert payload["q"]["w"].dtype == jnp.int8
+
+
+class TestServing:
+    def test_engine_completes_and_resets_lanes(self):
+        cfg = get_config("starcoder2-3b", reduced=True)
+        params = init_params(KEY, cfg)
+        eng = ServingEngine(params, cfg,
+                            ServeConfig(batch_lanes=2, max_seq=48))
+        for i in range(5):
+            eng.submit([3, 4, 5], max_new=6, request_id=i)
+        done = eng.run_until_drained()
+        assert len(done) == 5
+        assert all(1 <= len(d["tokens"]) <= 6 for d in done)
+
+    def test_greedy_deterministic_across_lanes(self):
+        """Same prompt in different lanes -> same greedy output (lane
+        isolation: the reset really clears state)."""
+        cfg = get_config("starcoder2-3b", reduced=True)
+        params = init_params(KEY, cfg)
+        eng = ServingEngine(params, cfg,
+                            ServeConfig(batch_lanes=2, max_seq=48))
+        for i in range(4):
+            eng.submit([7, 8, 9, 10], max_new=5, request_id=i)
+        done = eng.run_until_drained()
+        outs = {tuple(d["tokens"]) for d in done}
+        assert len(outs) == 1
+
+
+class TestShardingRules:
+    def test_param_specs_resolve_without_mesh(self):
+        set_axis_env(AxisEnv())
+        cfg = get_config("mixtral-8x7b", reduced=True)
+        specs = param_specs(init_params(KEY, cfg))
+        import jax.sharding as shd
+        for s in jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, shd.PartitionSpec)):
+            assert isinstance(s, shd.PartitionSpec)
+
+    def test_divisibility_demotion(self):
+        set_axis_env(AxisEnv(tp=("model",), active=True,
+                             sizes=(("model", 16),)))
+        try:
+            from repro.dist.sharding import _spec_for_path
+            # 8 columns on a 16-way axis -> demoted to replicated
+            spec = _spec_for_path("periods/0/mlstm/w_if", (6, 2048, 8))
+            assert spec[-1] is None
+            spec = _spec_for_path("periods/0/attn/wq", (6, 2048, 2048))
+            assert spec[-1] == "model"
+        finally:
+            set_axis_env(AxisEnv())
