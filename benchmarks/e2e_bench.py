@@ -20,7 +20,7 @@ from repro.train import AdamWConfig, TrainConfig, make_train_step
 from repro.train.optimizer import init_opt_state
 
 
-def _train_bench(arch: str) -> tuple:
+def _train_bench(arch: str, reps: int = 3) -> tuple:
     cfg = get_config(arch, reduced=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
     step = jax.jit(make_train_step(cfg, TrainConfig(optimizer=AdamWConfig())))
@@ -31,14 +31,14 @@ def _train_bench(arch: str) -> tuple:
     opt = init_opt_state(params)
     params, opt, _, m = step(params, opt, None, batch)  # compile
     t0 = time.time()
-    for _ in range(3):
+    for _ in range(reps):
         params, opt, _, m = step(params, opt, None, batch)
     jax.block_until_ready(m["loss"])
-    us = (time.time() - t0) / 3 * 1e6
+    us = (time.time() - t0) / reps * 1e6
     return (f"e2e/train_step_{arch}-reduced", us, "batch=4x64")
 
 
-def _decode_bench(arch: str, precision: str) -> tuple:
+def _decode_bench(arch: str, precision: str, reps: int = 5) -> tuple:
     cfg = get_config(arch, precision=precision, reduced=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
     if precision == "w8a8":
@@ -50,20 +50,22 @@ def _decode_bench(arch: str, precision: str) -> tuple:
     fn = jax.jit(lambda p, t, ps, st: decode_step(p, cfg, t, ps, st))
     _, states = fn(params, tok, pos, states)  # compile
     t0 = time.time()
-    for i in range(5):
+    for i in range(reps):
         lg, states = fn(params, tok, pos + i + 1, states)
     jax.block_until_ready(lg)
-    us = (time.time() - t0) / 5 * 1e6
+    us = (time.time() - t0) / reps * 1e6
     return (f"e2e/decode_{arch}-reduced_{precision}", us, f"lanes={b}")
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
+    reps = 1 if smoke else 3
     rows = [
-        _train_bench("codeqwen1.5-7b"),
-        _train_bench("mixtral-8x7b"),
-        _decode_bench("codeqwen1.5-7b", "bf16"),
-        _decode_bench("codeqwen1.5-7b", "w8a8"),
+        _train_bench("codeqwen1.5-7b", reps=reps),
+        _decode_bench("codeqwen1.5-7b", "bf16", reps=reps),
+        _decode_bench("codeqwen1.5-7b", "w8a8", reps=reps),
     ]
+    if not smoke:
+        rows.insert(1, _train_bench("mixtral-8x7b"))
     # roofline summary (if the dry-run artifacts exist)
     rdir = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "dryrun", "16x16")

@@ -1,9 +1,26 @@
-"""Pallas-kernel micro-benchmarks (interpret-mode timing is NOT hardware
-performance — the derived column reports work sizes for the roofline; TPU
-wall-times come from the dry-run analysis instead)."""
+"""Kernel micro-benchmarks: XLA reference path and interpret-mode Pallas.
+
+``--backend jnp`` (default) times the XLA reference path — kernel-exact
+semantics, meaningful relative timings.  ``--backend pallas`` runs the same
+harness through interpret-mode Pallas: NOT hardware performance (the derived
+column carries the work sizes for the roofline; TPU wall-times come from the
+dry-run analysis instead), but it exercises the exact kernel + autotuned
+block path end-to-end and catches dispatch regressions.
+
+Inputs are generated from a FIXED seed so timings are reproducible run to
+run; ``run()`` returns (name, us_per_call, derived) rows that run.py folds
+into BENCH_kernels.json.  The fused-epilogue pairs (``*_fused`` vs
+``*_unfused``) share inputs, so their delta is exactly the eliminated int32
+intermediate traffic (recorded in the derived column).
+"""
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
@@ -11,6 +28,9 @@ import numpy as np
 
 from repro.core import inumerics as inum
 from repro.kernels import ops
+from repro.kernels.common import set_interpret
+
+SEED = 0
 
 
 def _time(fn, *args, reps=3):
@@ -22,35 +42,120 @@ def _time(fn, *args, reps=3):
     return (time.time() - t0) / reps * 1e6
 
 
-def run() -> list[tuple]:
-    ops.set_backend("jnp")  # XLA reference path (kernel-exact semantics)
-    rng = np.random.default_rng(0)
+def run(backend: str = "jnp", smoke: bool = False) -> list[tuple]:
+    assert backend in ("jnp", "pallas"), backend
+    from repro.kernels.common import interpret_mode
+
+    prev_backend, prev_interpret = ops.backend(), interpret_mode()
+    ops.set_backend(backend)
+    set_interpret(True)  # pallas backend on CPU = interpret-mode correctness
+    # interpret mode is slow: shrink the sweep so --backend pallas stays
+    # usable as a correctness-timing smoke rather than a coffee break
+    small = smoke or backend == "pallas"
+    reps = 1 if small else 3
+    try:
+        return _run_rows(small, reps, backend)
+    finally:
+        ops.set_backend(prev_backend)
+        set_interpret(prev_interpret)
+
+
+def _run_rows(small: bool, reps: int, backend: str) -> list[tuple]:
+    rng = np.random.default_rng(SEED)
     rows = []
 
-    x = jnp.asarray(rng.integers(-127, 128, (256, 512)), jnp.int8)
-    w = jnp.asarray(rng.integers(-127, 128, (512, 512)), jnp.int8)
-    us = _time(ops.gemm_i8, x, w)
-    rows.append(("kernel/int8_gemm_256x512x512", us,
-                 f"macs={256*512*512}"))
+    m, k, n = (64, 256, 256) if small else (256, 512, 512)
+    x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    us = _time(ops.gemm_i8, x, w, reps=reps)
+    rows.append((f"kernel/int8_gemm_{m}x{k}x{n}/{backend}", us,
+                 f"macs={m*k*n}"))
 
-    xs = jnp.asarray(rng.integers(-127, 128, (64, 1024)), jnp.int32)
-    us = _time(lambda a: ops.softmax_i8(a, 0.05), xs)
-    rows.append(("kernel/int_softmax_64x1024", us, "elems=65536"))
+    # fused requant+GELU epilogue vs the unfused int32-roundtrip composition
+    # (jitted so the comparison measures the kernel structure, not python
+    # dispatch; on the pallas backend fused = ONE pallas_call, unfused = two
+    # with the int32 accumulator crossing HBM between them)
+    s0 = 8.0 / 127.0
+    us = _time(jax.jit(lambda a, b: ops.gelu_i8(
+        ops.gemm_i8(a, b).astype(jnp.int32), s0)), x, w, reps=reps)
+    rows.append((f"kernel/int8_gemm_gelu_unfused_{m}x{k}x{n}/{backend}", us,
+                 f"int32_intermediate_bytes={m*n*4}"))
+    us = _time(jax.jit(lambda a, b: ops.gemm_i8_gelu(a, b, s0)), x, w,
+               reps=reps)
+    rows.append((f"kernel/int8_gemm_gelu_fused_{m}x{k}x{n}/{backend}", us,
+                 f"int32_intermediate_bytes=0"))
 
-    xl = jnp.asarray(rng.integers(-127, 128, (64, 2048)), jnp.int32)
-    g = jnp.asarray(rng.integers(32, 127, (2048,)), jnp.int32)
-    b = jnp.zeros((2048,), jnp.int32)
-    us = _time(lambda a: ops.layernorm_i8(a, g, b), xl)
-    rows.append(("kernel/int_layernorm_64x2048", us, "elems=131072"))
+    # fused requant+residual-add epilogue vs requant-then-add
+    rq = inum.compute_requant_params(3e-3, k * 127 * 127)
+    res = jnp.asarray(rng.integers(-127, 128, (m, n)), jnp.int8)
+    us = _time(jax.jit(lambda a, b, r: jnp.clip(
+        ops.requant(ops.gemm_i8(a, b), rq).astype(jnp.int32)
+        + r.astype(jnp.int32), -128, 127).astype(jnp.int8)), x, w, res,
+        reps=reps)
+    rows.append((f"kernel/int8_gemm_add_unfused_{m}x{k}x{n}/{backend}", us,
+                 f"int32_intermediate_bytes={m*n*4}"))
+    us = _time(jax.jit(lambda a, b, r: ops.gemm_i8_add(a, b, rq, r)),
+               x, w, res, reps=reps)
+    rows.append((f"kernel/int8_gemm_add_fused_{m}x{k}x{n}/{backend}", us,
+                 f"int32_intermediate_bytes=0"))
 
-    us = _time(lambda a: ops.gelu_i8(a, 0.05), xl)
-    rows.append(("kernel/int_gelu_64x2048", us, "elems=131072"))
+    rs, cs = (16, 256) if small else (64, 1024)
+    xs = jnp.asarray(rng.integers(-127, 128, (rs, cs)), jnp.int32)
+    us = _time(lambda a: ops.softmax_i8(a, 0.05), xs, reps=reps)
+    rows.append((f"kernel/int_softmax_{rs}x{cs}/{backend}", us,
+                 f"elems={rs*cs}"))
 
-    q = jnp.asarray(rng.normal(size=(2, 8, 512, 64)), jnp.float32)
-    us = _time(lambda a: ops.attention(a, a, a, causal=True), q)
-    rows.append(("kernel/flash_attention_512", us, f"flops={2*2*8*512*512*64*2}"))
+    rl, cl = (16, 512) if small else (64, 2048)
+    xl = jnp.asarray(rng.integers(-127, 128, (rl, cl)), jnp.int32)
+    g = jnp.asarray(rng.integers(32, 127, (cl,)), jnp.int32)
+    b = jnp.zeros((cl,), jnp.int32)
+    us = _time(lambda a: ops.layernorm_i8(a, g, b), xl, reps=reps)
+    rows.append((f"kernel/int_layernorm_{rl}x{cl}/{backend}", us,
+                 f"elems={rl*cl}"))
 
-    qi = jnp.asarray(rng.integers(-127, 128, (1, 4, 256, 64)), jnp.int8)
-    us = _time(lambda a: ops.attention_i8(a, a, a, scale=0.002), qi)
-    rows.append(("kernel/int8_attention_256", us, "int8 QK+softmax+PV"))
+    us = _time(lambda a: ops.gelu_i8(a, 0.05), xl, reps=reps)
+    rows.append((f"kernel/int_gelu_{rl}x{cl}/{backend}", us, f"elems={rl*cl}"))
+
+    s = 128 if small else 512
+    q = jnp.asarray(rng.normal(size=(2, 8, s, 64)), jnp.float32)
+    us = _time(lambda a: ops.attention(a, a, a, causal=True), q, reps=reps)
+    rows.append((f"kernel/flash_attention_{s}/{backend}", us,
+                 f"flops={2*2*8*s*s*64*2}"))
+
+    si = 128 if small else 256
+    qi = jnp.asarray(rng.integers(-127, 128, (1, 4, si, 64)), jnp.int8)
+    us = _time(lambda a: ops.attention_i8(a, a, a, scale=0.002), qi,
+               reps=reps)
+    rows.append((f"kernel/int8_attention_{si}/{backend}", us,
+                 f"work=int8 QK+softmax+PV"))
+
+    # serving hot path: int8-KV single-token decode attention
+    sd, hq, hkv, d = (128, 8, 2, 64)
+    qd = jnp.asarray(rng.normal(size=(2, hq, d)), jnp.float32)
+    kq = jnp.asarray(rng.integers(-127, 128, (2, sd, hkv, d)), jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 128, (2, sd, hkv, d)), jnp.int8)
+    ks = jnp.asarray(np.abs(rng.normal(size=(2, sd, hkv, 1))) + 1e-3,
+                     jnp.float32)
+    vs = jnp.asarray(np.abs(rng.normal(size=(2, sd, hkv, 1))) + 1e-3,
+                     jnp.float32)
+    pos = jnp.asarray(np.tile(np.arange(sd), (2, 1)), jnp.int32)
+    qpos = jnp.full((2,), sd - 1, jnp.int32)
+    us = _time(lambda *a: ops.decode_attention_int8kv(*a),
+               qd, kq, ks, vq, vs, pos, qpos, reps=reps)
+    rows.append((f"kernel/int8_kv_decode_{sd}/{backend}", us,
+                 f"cache_bytes={2*2*sd*hkv*d}"))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
+                    help="XLA reference path or interpret-mode Pallas")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(backend=args.backend, smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,30 +1,82 @@
 """Benchmark driver: one function per paper table + kernel/e2e benches.
 
-Prints ``name,us_per_call,derived`` CSV (and human tables to the sections
-above).  Usage: PYTHONPATH=src python -m benchmarks.run
+Prints human tables + ``name,us_per_call,derived`` CSV AND persists two
+machine-readable artifacts at the repo root so every PR has a perf
+trajectory to regress against:
+
+  BENCH_kernels.json  kernel micro-bench rows  {name: {us, work}}
+  BENCH_e2e.json      e2e / paper-table rows   {name: {us, work}}
+
+Keys are stable across runs (fixed RNG seed, shape- and backend-suffixed
+names); compare two checkouts with a plain JSON diff.  ``--smoke`` runs a
+~30 s subset that only ADDS never-measured keys — it never overwrites an
+existing entry, so gating runs (scripts/verify.sh) cannot pollute the
+trajectory a full run established.
+
+Usage: PYTHONPATH=src python benchmarks/run.py [--smoke] [--backend jnp]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _write_json(path: str, rows: list[tuple], meta: dict,
+                smoke: bool) -> None:
+    entries = {name: {"us": round(us, 1), "work": derived}
+               for name, us, derived in rows}
+    full = os.path.join(REPO_ROOT, path)
+    prev = {}
+    if os.path.exists(full):
+        try:
+            with open(full) as f:
+                prev = json.load(f).get("entries", {})
+        except ValueError:
+            prev = {}
+    if smoke:
+        # a smoke run is a gate, not a measurement: it only fills keys that
+        # have never been measured, never overwrites a full run's numbers
+        entries = {**entries, **prev}
+    else:
+        entries = {**prev, **entries}
+    with open(full, "w") as f:
+        json.dump(dict(meta, entries=entries), f, indent=1, sort_keys=True)
+    print(f"wrote {path} ({len(entries)} entries)")
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~30 s subset; writes the same BENCH_*.json files")
+    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp")
+    args = ap.parse_args()
+
     from benchmarks import cgra_tables, e2e_bench, kernel_bench
 
-    rows = []
-    rows += cgra_tables.table_vi()
-    rows += cgra_tables.table_v()
-    rows += cgra_tables.table_ii()
-    rows += cgra_tables.table_iii_iv()
-    rows += kernel_bench.run()
-    rows += e2e_bench.run()
+    kernel_rows = kernel_bench.run(backend=args.backend, smoke=args.smoke)
+
+    e2e_rows = []
+    e2e_rows += cgra_tables.table_vi()
+    if not args.smoke:
+        e2e_rows += cgra_tables.table_v()
+        e2e_rows += cgra_tables.table_ii()
+        e2e_rows += cgra_tables.table_iii_iv()
+    e2e_rows += e2e_bench.run(smoke=args.smoke)
 
     print("\nname,us_per_call,derived")
-    for name, us, derived in rows:
+    for name, us, derived in kernel_rows + e2e_rows:
         print(f"{name},{us:.1f},{derived}")
+
+    meta = {"schema": 1, "seed": kernel_bench.SEED}
+    _write_json("BENCH_kernels.json", kernel_rows, meta, smoke=args.smoke)
+    _write_json("BENCH_e2e.json", e2e_rows, meta, smoke=args.smoke)
 
 
 if __name__ == "__main__":

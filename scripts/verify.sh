@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification: full test suite + a ~30 s benchmark smoke that must
+# leave machine-readable perf artifacts at the repo root.
+#
+# Usage: scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: pytest =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== benchmark smoke =="
+python benchmarks/run.py --smoke
+
+for f in BENCH_kernels.json BENCH_e2e.json; do
+    if [ ! -f "$f" ]; then
+        echo "FAIL: $f missing after benchmark smoke" >&2
+        exit 1
+    fi
+done
+echo "verify OK: tests green, BENCH_kernels.json + BENCH_e2e.json present"

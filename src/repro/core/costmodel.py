@@ -93,3 +93,71 @@ def area_table() -> list[tuple[str, float, float]]:
     return [(k, v, 100.0 * v / total) for k, v in AREA_UM2.items()] + [
         ("NX-CGRA", total, 100.0)
     ]
+
+
+# ---------------------------------------------------------------------------
+# TPU kernel tile cost model (seeds kernels/autotune.py)
+#
+# Same philosophy as the CGRA model above: a handful of GLOBAL machine
+# constants, never per-kernel fudge factors.  The absolute numbers are
+# v5e-class ballpark; only the RELATIVE cost of candidate tiles matters to
+# the autotuner, which needs (a) padding waste, (b) compute/HBM roofline,
+# (c) per-grid-step overhead, (d) a VMEM feasibility wall.
+# ---------------------------------------------------------------------------
+
+TPU_VMEM_BYTES = 16 * 2 ** 20          # per-core VMEM
+TPU_MACS_PER_CYCLE = 128 * 128         # one MXU pass per cycle
+TPU_HBM_BYTES_PER_CYCLE = 870          # ~819 GB/s at ~940 MHz
+TPU_GRID_STEP_CYCLES = 400             # per-step dispatch + copy setup
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def gemm_tile_cost(m: int, k: int, n: int, bm: int, bn: int, bk: int,
+                   in_bytes: int = 1, out_bytes: int = 4) -> float:
+    """Estimated cycles for a blocked (M,K)x(K,N) GEMM with tile (bm,bn,bk).
+
+    Models the Pallas grid (M/bm, N/bn, K/bk) with the int32 accumulator
+    resident in VMEM: padded-MAC compute vs HBM streaming roofline, plus
+    per-grid-step overhead.  Returns inf when the working set (double-
+    buffered operand tiles + accumulator) exceeds VMEM.
+    """
+    gm, gn, gk = _cdiv(m, bm), _cdiv(n, bn), _cdiv(k, bk)
+    vmem = 2 * (bm * bk + bk * bn) * in_bytes + bm * bn * (4 + out_bytes)
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    steps = gm * gn * gk
+    compute = steps * (bm * bn * bk) / TPU_MACS_PER_CYCLE
+    hbm = (steps * (bm * bk + bk * bn) * in_bytes
+           + gm * gn * bm * bn * out_bytes) / TPU_HBM_BYTES_PER_CYCLE
+    return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES
+
+
+def attention_tile_cost(s_q: int, s_kv: int, d: int, bq: int, bk: int,
+                        in_bytes: int = 2) -> float:
+    """Estimated cycles for one (batch*head) slice of flash attention with
+    query/key tiles (bq, bk): two MXU contractions per step + KV restream
+    per query block."""
+    gq, gk = _cdiv(s_q, bq), _cdiv(s_kv, bk)
+    vmem = (bq * d + 2 * bk * d) * in_bytes + bq * (bk + 2 * d + 2) * 4
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    steps = gq * gk
+    compute = steps * 2 * (bq * bk * d) / TPU_MACS_PER_CYCLE
+    hbm = (gq * (bq * d + gk * 2 * bk * d) * in_bytes
+           ) / TPU_HBM_BYTES_PER_CYCLE
+    return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES
+
+
+def rowwise_tile_cost(m: int, n: int, bm: int,
+                      in_bytes: int = 4, out_bytes: int = 1) -> float:
+    """Estimated cycles for a row-blocked elementwise/reduction kernel
+    (softmax / layernorm / quant / requant): pure streaming + step cost."""
+    gm = _cdiv(m, bm)
+    vmem = bm * n * (in_bytes + out_bytes)
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    hbm = gm * bm * n * (in_bytes + out_bytes) / TPU_HBM_BYTES_PER_CYCLE
+    return hbm + gm * TPU_GRID_STEP_CYCLES

@@ -1,0 +1,24 @@
+"""Distribution substrate: logical-axis sharding, gradient compression,
+pipeline parallelism.
+
+``sharding``    — the logical axis environment (dp/fsdp/tp/ep/sp) bound to a
+                  physical mesh, ``shard_hint`` constraints, and the
+                  path-aware parameter PartitionSpec rules.
+``compression`` — error-feedback int8 gradient compression for the cross-pod
+                  all-reduce (reuses the ``core.inumerics`` quantizers).
+``pipeline``    — GPipe-style stage splitting + collective schedule and the
+                  bubble-fraction accounting.
+"""
+from .compression import (  # noqa: F401
+    compress_grads,
+    decompress_grads,
+    init_error_state,
+)
+from .pipeline import bubble_fraction, pipeline_apply, split_stages  # noqa: F401
+from .sharding import (  # noqa: F401
+    AxisEnv,
+    axis_env,
+    param_specs,
+    set_axis_env,
+    shard_hint,
+)

@@ -1,0 +1,54 @@
+"""Error-feedback int8 gradient compression (cross-pod all-reduce payload).
+
+1-bit-Adam / PowerSGD lineage, restricted to what the integer substrate
+already provides: per-tensor symmetric int8 quantization from
+``core.inumerics`` plus an error-feedback accumulator.  The wire payload is
+the int8 tree + one f32 scale per tensor (a 4x shrink of the cross-pod
+all-reduce vs f32 grads; 2x vs bf16), and the quantization error is carried
+into the next step instead of being dropped — the EF sum telescopes, so the
+ACCUMULATED update tracks the true gradient sum even though each individual
+step is coarsely quantized.
+
+Contract used by ``train.trainer``:
+
+    err   = init_error_state(params)            # zeros, f32, like params
+    payload, err = compress_grads(grads, err)   # payload crosses the wire
+    grads = decompress_grads(payload)           # at the receiver
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.inumerics import absmax_scale, quantize
+
+F32 = jnp.float32
+
+
+def init_error_state(params):
+    """Zero residual accumulator shaped like ``params`` (f32 masters)."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, F32), params)
+
+
+def compress_grads(grads, err_state):
+    """(grads, err) -> (wire payload, new err).
+
+    payload = {"q": int8 tree, "scale": f32 scalar tree}.  The corrected
+    gradient g + err is quantized; what the int8 grid cannot represent goes
+    back into err for the next step.
+    """
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(F32) + e, grads, err_state)
+    scales = jax.tree.map(lambda c: absmax_scale(c, bits=8), corrected)
+    q = jax.tree.map(
+        lambda c, s: quantize(c, s, bits=8).astype(jnp.int8),
+        corrected, scales)
+    new_err = jax.tree.map(
+        lambda c, qi, s: c - qi.astype(F32) * s, corrected, q, scales)
+    return {"q": q, "scale": scales}, new_err
+
+
+def decompress_grads(payload):
+    """Wire payload -> f32 gradient tree (receiver side)."""
+    return jax.tree.map(
+        lambda qi, s: qi.astype(F32) * s, payload["q"], payload["scale"])

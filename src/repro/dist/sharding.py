@@ -1,0 +1,193 @@
+"""Logical-axis sharding environment and parameter PartitionSpec rules.
+
+The model code is written against LOGICAL axes:
+
+    dp    batch (data parallel)
+    fsdp  parameter storage sharding (ZeRO-3; contraction dims)
+    tp    tensor parallel (Megatron column/row split)
+    ep    expert parallel (MoE expert dim)
+    sp    sequence parallel (residual-stream seq dim between TP regions)
+
+``AxisEnv`` binds each logical axis to zero or more PHYSICAL mesh axes
+("data", "model", "pod", ...).  ``launch/specs.make_cell_plan`` builds the
+binding per (arch x shape x mesh) cell; single-host paths install the
+default inactive env, which turns every hint into a no-op.
+
+``shard_hint(x, *logical)`` annotates intermediate values inside jit —
+GSPMD propagates from these anchors.  ``param_specs`` derives a
+PartitionSpec tree for a parameter pytree from path-aware rules.  Both
+apply DIVISIBILITY DEMOTION: a dim that does not divide the bound mesh
+axes is replicated instead (the elastic-restore contract — the same
+checkpoint resharded onto a smaller mesh demotes gracefully rather than
+failing to compile).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_AXES = ("dp", "fsdp", "tp", "ep", "sp")
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    """Binding of logical model axes to physical mesh axes."""
+
+    dp: tuple[str, ...] = ()
+    fsdp: tuple[str, ...] = ()
+    tp: tuple[str, ...] = ()
+    ep: tuple[str, ...] = ()
+    sp: tuple[str, ...] = ()
+    active: bool = False
+    # (mesh_axis_name, size) pairs for every axis of the bound mesh
+    sizes: tuple[tuple[str, int], ...] = ()
+
+    def axis_size(self, name: str) -> int:
+        return dict(self.sizes).get(name, 1)
+
+    def axes_size(self, axes: tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.axis_size(a)
+        return n
+
+    def logical(self, name: str) -> tuple[str, ...]:
+        assert name in LOGICAL_AXES, name
+        return getattr(self, name)
+
+
+_ENV: list[AxisEnv] = [AxisEnv()]
+
+
+def set_axis_env(env: AxisEnv) -> None:
+    _ENV[0] = env
+
+
+def axis_env() -> AxisEnv:
+    return _ENV[0]
+
+
+def _mesh_bound() -> bool:
+    """True when a physical mesh context manager is active (``with mesh:``).
+
+    with_sharding_constraint with a bare PartitionSpec requires the mesh
+    context; outside of one (single-host smoke paths that still installed
+    an active env) the hints degrade to no-ops.
+    """
+    from jax._src import mesh as mesh_lib  # jax 0.4.x private, pinned
+
+    return not mesh_lib.thread_resources.env.physical_mesh.empty
+
+
+def _resolve_dim(env: AxisEnv, logical: str | None, dim: int,
+                 used: set[str]) -> str | tuple[str, ...] | None:
+    """Logical name -> physical mesh axes for one tensor dim.
+
+    Keeps the longest PREFIX of the bound axes whose cumulative product
+    divides ``dim`` (progressive demotion), skipping axes already consumed
+    by an earlier dim of the same spec (GSPMD forbids duplicates) and axes
+    absent from the bound mesh.
+    """
+    if logical is None:
+        return None
+    kept: list[str] = []
+    prod = 1
+    for ax in env.logical(logical):
+        size = env.axis_size(ax)
+        if size <= 1 or ax in used:
+            continue
+        if dim % (prod * size) != 0:
+            break
+        kept.append(ax)
+        prod *= size
+    if not kept:
+        return None
+    used.update(kept)
+    return kept[0] if len(kept) == 1 else tuple(kept)
+
+
+def _resolve_spec(env: AxisEnv, logical: tuple, shape: tuple) -> list:
+    used: set[str] = set()
+    return [_resolve_dim(env, l, d, used) for l, d in zip(logical, shape)]
+
+
+def shard_hint(x: jax.Array, *logical) -> jax.Array:
+    """Constrain ``x`` to the resolved sharding of per-dim logical names.
+
+    ``logical`` entries are logical axis names or None, one per dim.  A
+    no-op when the env is inactive or no mesh context is bound.
+    """
+    env = _ENV[0]
+    if not env.active or not hasattr(x, "shape"):
+        return x
+    if len(logical) != x.ndim or not _mesh_bound():
+        return x
+    spec = _resolve_spec(env, logical, x.shape)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter PartitionSpec rules (path-aware)
+# ---------------------------------------------------------------------------
+
+# row-parallel projections: the CONTRACTION dim carries "tp" (Megatron row
+# split: partial sums all-reduce), the output dim carries fsdp storage.
+_ROW_PARALLEL = {"wo", "w_out"}
+# leaves that must stay replicated regardless of divisibility (norm/gate
+# vectors: sharding them buys nothing and adds collectives)
+_REPLICATED = {"scale", "bias", "gate_attn", "gate_mlp", "shared_gate"}
+
+
+def _spec_for_path(path: str, shape: tuple) -> P:
+    """PartitionSpec for one parameter leaf given its tree path and shape.
+
+    Rules (all subject to divisibility demotion):
+      * 0/1-D leaves and norm/gate vectors: replicated
+      * ``embed`` (vocab, d): vocab on tp (vocab is 128-padded), d on fsdp
+      * expert stacks ``experts/*`` (..., E, in, out): E on ep, then the
+        matrix dims by the standard rule (ep usually consumes the model
+        axis, so tp on the matrix dims drops as a duplicate — GShard
+        semantics: experts sharded, per-expert weights replicated)
+      * row-parallel names (wo, w_out): tp on dim[-2], fsdp on dim[-1]
+      * everything else >= 2-D: tp on dim[-1], fsdp on dim[-2]
+    """
+    env = _ENV[0]
+    name = path.rsplit("/", 1)[-1]
+    ndim = len(shape)
+    logical: list = [None] * ndim
+    if ndim >= 2 and name not in _REPLICATED:
+        if name == "embed":
+            logical[0], logical[1] = "tp", "fsdp"
+        elif name in _ROW_PARALLEL:
+            logical[-2], logical[-1] = "tp", "fsdp"
+        else:
+            logical[-2], logical[-1] = "fsdp", "tp"
+        if "experts/" in path or path.endswith("/experts"):
+            # stacked (periods, E, in, out) or (E, in, out)
+            if ndim >= 3:
+                logical[ndim - 3] = "ep"
+    used: set[str] = set()
+    resolved = []
+    # tp gets priority over fsdp on conflicts: resolve ep, then tp, then the
+    # rest, but emit in dim order
+    order = sorted(range(ndim),
+                   key=lambda i: {"ep": 0, "tp": 1}.get(logical[i], 2))
+    out: dict[int, object] = {}
+    for i in order:
+        out[i] = _resolve_dim(env, logical[i], shape[i], used)
+    resolved = [out[i] for i in range(ndim)]
+    return P(*resolved)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(params):
+    """PartitionSpec tree mirroring ``params`` (leaves become specs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _spec_for_path(_path_str(path), x.shape), params)

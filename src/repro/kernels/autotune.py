@@ -1,0 +1,215 @@
+"""Shape-aware kernel block-size selection (table-then-measure policy).
+
+Every Pallas entry point in ``kernels/ops.py`` asks this module for its
+block sizes instead of hardcoding MXU-shaped constants.  Resolution order
+for a (kernel, shape, dtype, backend) key:
+
+  1. **Measured cache** — a JSON file of block sizes that were actually
+     timed on this machine (``REPRO_AUTOTUNE_CACHE`` env var, default
+     ``.autotune/measured.json`` at the repo root).  Benchmarks populate it
+     via ``measure``; an exact key hit always wins.
+  2. **Cost-model-seeded table** — the analytic tile costs in
+     ``core.costmodel`` (padding waste, compute/HBM roofline, grid-step
+     overhead, VMEM wall) evaluated over the legal candidate lattice; the
+     argmin is memoized per process.
+  3. The candidate lattice itself guarantees legality, so there is no
+     third fallback: every returned tile is MXU/VPU-legal (lane dims are
+     multiples of 128, sublane dims multiples of 8) and VMEM-feasible.
+
+The policy is "table, then measure": the cost model gives a good default
+with zero warmup; real deployments run the benchmark sweep once per
+machine and the measured numbers override the table from then on.  Keys
+are exact — a measurement for one shape never generalizes to another
+(that is the table's job).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+from ..core import costmodel
+
+LANE = 128      # last-dim tile: VREG lane width / MXU edge
+SUBLANE = 8     # second-to-last-dim tile for 32-bit types
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(_REPO_ROOT, ".autotune", "measured.json"))
+
+
+_MEASURED: dict[str, dict] | None = None
+
+
+def _measured() -> dict:
+    global _MEASURED
+    if _MEASURED is None:
+        try:
+            with open(cache_path()) as f:
+                _MEASURED = json.load(f)
+        except (OSError, ValueError):
+            _MEASURED = {}
+    return _MEASURED
+
+
+def record(key: str, blocks: tuple[int, ...], us: float) -> None:
+    """Persist a measured (key -> blocks) entry; keeps the fastest."""
+    cache = _measured()
+    prev = cache.get(key)
+    if prev is not None and prev.get("us", float("inf")) <= us:
+        return
+    cache[key] = {"blocks": list(blocks), "us": us}
+    path = cache_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def reset_measured_cache() -> None:
+    """Drop the in-process view of the measured cache (tests/env changes)."""
+    global _MEASURED
+    _MEASURED = None
+    gemm_blocks.cache_clear()
+    attention_blocks.cache_clear()
+    decode_blocks.cache_clear()
+    rowwise_blocks.cache_clear()
+
+
+def measure(key: str, candidates, timer) -> tuple[int, ...]:
+    """Time ``timer(blocks) -> us`` over candidates, record + return best."""
+    best, best_us = None, float("inf")
+    for blocks in candidates:
+        us = timer(blocks)
+        if us < best_us:
+            best, best_us = tuple(blocks), us
+    assert best is not None, "no candidates"
+    record(key, best, best_us)
+    return best
+
+
+def is_mxu_legal(bm: int, bn: int, bk: int) -> bool:
+    """GEMM tile legality: operand/output blocks land on (8, 128) tiles."""
+    return bm % SUBLANE == 0 and bn % LANE == 0 and bk % LANE == 0
+
+
+def _hit(key: str):
+    ent = _measured().get(key)
+    return tuple(ent["blocks"]) if ent else None
+
+
+# ---------------------------------------------------------------------------
+# per-kernel tables
+# ---------------------------------------------------------------------------
+
+_GEMM_BMS = (8, 16, 32, 64, 128, 256, 512)
+_GEMM_BNS = (128, 256, 512)
+_GEMM_BKS = (128, 256, 512)
+
+
+@functools.lru_cache(maxsize=4096)
+def gemm_blocks(m: int, k: int, n: int, dtype: str = "int8",
+                backend: str = "pallas") -> tuple[int, int, int]:
+    """(bm, bn, bk) for an (M,K)x(K,N) GEMM; wrappers pad up to these."""
+    hit = _hit(f"gemm/{m}x{k}x{n}/{dtype}/{backend}")
+    if hit:
+        return hit
+    in_bytes = 1 if dtype == "int8" else 2
+    best, best_cost = None, float("inf")
+    for bm in _GEMM_BMS:
+        if bm > max(_round_up(m, SUBLANE), SUBLANE):
+            continue
+        for bn in _GEMM_BNS:
+            if bn > max(_round_up(n, LANE), LANE):
+                continue
+            for bk in _GEMM_BKS:
+                if bk > max(_round_up(k, LANE), LANE):
+                    continue
+                c = costmodel.gemm_tile_cost(m, k, n, bm, bn, bk,
+                                             in_bytes=in_bytes)
+                if c < best_cost:
+                    best, best_cost = (bm, bn, bk), c
+    assert best is not None and is_mxu_legal(*best), (m, k, n, best)
+    return best
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _divisor_tiles(s: int, cap: int = 1024) -> list[int]:
+    """Divisors of s usable as an un-padded block dim, largest-friendly:
+    multiples of SUBLANE preferred, plus s itself when small."""
+    out = [d for d in range(SUBLANE, min(s, cap) + 1, SUBLANE) if s % d == 0]
+    if s <= cap:
+        out.append(s)
+    return sorted(set(out)) or [s]
+
+
+@functools.lru_cache(maxsize=4096)
+def attention_blocks(s_q: int, s_kv: int, d: int,
+                     dtype: str = "bf16",
+                     backend: str = "pallas") -> tuple[int, int]:
+    """(bq, bk) for flash attention.  The kernels index without padding, so
+    blocks must DIVIDE the sequence lengths exactly."""
+    hit = _hit(f"attn/{s_q}x{s_kv}x{d}/{dtype}/{backend}")
+    if hit:
+        return hit
+    in_bytes = 1 if dtype == "int8" else 2
+    best, best_cost = None, float("inf")
+    q_tiles, k_tiles = _divisor_tiles(s_q), _divisor_tiles(s_kv)
+    for bq in q_tiles:
+        for bk in k_tiles:
+            c = costmodel.attention_tile_cost(s_q, s_kv, d, bq, bk,
+                                              in_bytes=in_bytes)
+            if c < best_cost:
+                best, best_cost = (bq, bk), c
+    if best is None:  # every candidate blew VMEM: take the smallest tiles
+        best = (q_tiles[0], k_tiles[0])
+    return best
+
+
+@functools.lru_cache(maxsize=4096)
+def decode_blocks(s: int, d: int, g: int) -> int:
+    """KV block for the int8-KV decode kernel: one query tile (G, D) stays
+    resident; bk divides the cache length S."""
+    hit = _hit(f"decode/{s}x{d}x{g}")
+    if hit:
+        return hit[0]
+    tiles = _divisor_tiles(s, cap=2048)
+    best, best_cost = tiles[0], float("inf")
+    for bk in tiles:
+        c = costmodel.attention_tile_cost(g, s, d, max(g, 1), bk, in_bytes=1)
+        if c < best_cost:
+            best, best_cost = bk, c
+    return best
+
+
+def elementwise_blocks(m: int, n: int, dtype: str = "int32") -> tuple[int, int]:
+    """(bm, bn) for 2-D elementwise kernels (GELU, requantize): tuned row
+    block + one lane-width column tile (wrappers pad columns up to it)."""
+    return rowwise_blocks(m, n, dtype), LANE
+
+
+@functools.lru_cache(maxsize=4096)
+def rowwise_blocks(m: int, n: int, dtype: str = "int32") -> int:
+    """Row block for elementwise/row-reduction kernels (softmax, layernorm,
+    GELU, quantize, requantize).  Wrappers pad rows up to the block."""
+    hit = _hit(f"rowwise/{m}x{n}/{dtype}")
+    if hit:
+        return hit[0]
+    best, best_cost = SUBLANE, float("inf")
+    for bm in (8, 16, 32, 64, 128):
+        c = costmodel.rowwise_tile_cost(_round_up(m, SUBLANE), max(n, LANE),
+                                        bm)
+        # padding waste: rows processed vs rows requested
+        c *= _round_up(m, bm) / max(m, 1)
+        if c < best_cost:
+            best, best_cost = bm, c
+    return best

@@ -49,3 +49,15 @@ def pick_block(dim: int, target: int, align: int) -> int:
         return align
     b = min(target, dim)
     return max(align, (b // align) * align)
+
+
+def requant_block(acc, s1: int, mult: int, s2: int):
+    """Traced shift/mul16/shift requantization of an int32 block to the
+    int8 range (round-half-up) — the in-kernel form of
+    ``core.inumerics.requantize``, shared by every epilogue."""
+    if s1 > 0:
+        acc = (acc + (1 << (s1 - 1))) >> s1
+    acc = jnp.clip(acc, -(1 << 15), (1 << 15) - 1) * mult
+    if s2 > 0:
+        acc = (acc + (1 << (s2 - 1))) >> s2
+    return jnp.clip(acc, -128, 127)

@@ -1,14 +1,25 @@
-"""int8 x int8 -> int32 GEMM with fused requantization epilogue.
+"""int8 x int8 -> int32 GEMM with fused epilogues.
 
 The paper's ``gemm`` kernel (Table II) adapted to the TPU MXU: int8 operands
 stream HBM->VMEM in MXU-aligned blocks (the MOB role: the Pallas pipeline's
 async copies mask HBM latency behind compute, §III-B-2), the MXU accumulates
-in int32 (the PE 4x fused-MAC role), and the epilogue requantizes to int8
-using the shift/mul16/shift scheme from ``core.inumerics`` — the exact
-arithmetic the NX-CGRA PE datapath can express.
+in int32 (the PE 4x fused-MAC role), and the epilogue finishes the tile
+in-register — the int32 accumulator NEVER round-trips through HBM:
+
+  none          int32 accumulator out (the original contract)
+  requant       int8 out via the shift/mul16/shift scheme (core.inumerics)
+  requant_gelu  integer GELU of the accumulator at a static scale — the
+                fused form of ``gemm_i8 -> gelu_i8`` (MLP up-projection)
+  requant_add   requantize + int8 residual add (attention out-projection
+                into an int8 residual stream)
+  scaled        f32 dequant epilogue acc * row_scale * col_scale (+bias) —
+                the fused form of the W8A8 linear's float rescale
+  scaled_gelu   scaled, then integer GELU at a static activation scale
+  scaled_add    scaled, then residual add in the output dtype
 
 Grid: (M/bm, N/bn, K/bk), K innermost so the int32 accumulator tile stays
-resident in VMEM scratch across the K loop (one write to HBM per (m,n) tile).
+resident in VMEM scratch across the K loop (one write to HBM per (m,n)
+tile).  Block sizes come from ``kernels.autotune``.
 """
 from __future__ import annotations
 
@@ -20,13 +31,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.inumerics import RequantParams
-from .common import interpret_mode
+from .common import interpret_mode, requant_block
+from .int_gelu import gelu_block, gelu_requant_params
 
 I32 = jnp.int32
+F32 = jnp.float32
+
+EPILOGUES = ("none", "requant", "requant_gelu", "requant_add",
+             "scaled", "scaled_gelu", "scaled_add")
 
 
-def _kernel(x_ref, w_ref, out_ref, acc_ref, *, n_k: int, s1: int, mult: int,
-            s2: int, out_dtype):
+def _kernel(*refs, n_k: int, epilogue: str, s1: int, mult: int, s2: int,
+            gelu_scale: float, g_s1: int, g_mult: int, g_s2: int,
+            has_scales: bool, has_bias: bool, has_res: bool, stream_dtype):
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    xs_ref = next(it) if has_scales else None
+    ws_ref = next(it) if has_scales else None
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_res else None
+    out_ref, acc_ref = next(it), next(it)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -43,21 +67,41 @@ def _kernel(x_ref, w_ref, out_ref, acc_ref, *, n_k: int, s1: int, mult: int,
     @pl.when(k == n_k - 1)
     def _epilogue():
         acc = acc_ref[...]
-        if out_dtype == jnp.int32:
+        if epilogue == "none":
             out_ref[...] = acc
-        else:
-            # requantize: shift -> 16-bit multiply -> shift (round-half-up)
-            if s1 > 0:
-                acc = (acc + (1 << (s1 - 1))) >> s1
-            acc = jnp.clip(acc, -(1 << 15), (1 << 15) - 1) * mult
-            if s2 > 0:
-                acc = (acc + (1 << (s2 - 1))) >> s2
-            out_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
+        elif epilogue == "requant":
+            out_ref[...] = requant_block(acc, s1, mult, s2).astype(jnp.int8)
+        elif epilogue == "requant_gelu":
+            out_ref[...] = gelu_block(
+                acc, scale=gelu_scale, s1=g_s1, mult=g_mult,
+                s2=g_s2).astype(jnp.int8)
+        elif epilogue == "requant_add":
+            q = requant_block(acc, s1, mult, s2)
+            out_ref[...] = jnp.clip(
+                q + r_ref[...].astype(I32), -128, 127).astype(jnp.int8)
+        else:  # scaled family: f32 dequant in-register
+            h = acc.astype(F32) * xs_ref[...] * ws_ref[...]
+            if has_bias:
+                h = h + b_ref[...]
+            if epilogue == "scaled_gelu":
+                # the unfused path quantizes the bf16 residual stream: keep
+                # the same grid so fused == unfused bit-for-bit
+                h = h.astype(stream_dtype).astype(F32)
+                q = jnp.clip(jnp.round(h / gelu_scale), -128, 127).astype(I32)
+                out_ref[...] = gelu_block(
+                    q, scale=gelu_scale, s1=g_s1, mult=g_mult,
+                    s2=g_s2).astype(jnp.int8)
+            else:
+                h = h.astype(stream_dtype)
+                if epilogue == "scaled_add":
+                    h = h + r_ref[...]
+                out_ref[...] = h
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("requant", "out_dtype", "bm", "bn", "bk", "interpret"),
+    static_argnames=("requant", "out_dtype", "bm", "bn", "bk", "epilogue",
+                     "gelu_scale", "interpret"),
 )
 def int8_gemm(
     x: jax.Array,
@@ -67,32 +111,76 @@ def int8_gemm(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
+    epilogue: str | None = None,
+    gelu_scale: float | None = None,
+    x_scale: jax.Array | None = None,   # (M, 1) f32 per-row act scales
+    w_scale: jax.Array | None = None,   # (1, N) f32 per-col weight scales
+    bias: jax.Array | None = None,      # (1, N) f32
+    residual: jax.Array | None = None,  # (M, N) int8 or out_dtype
     interpret: bool | None = None,
 ) -> jax.Array:
-    """x[int8 M,K] @ w[int8 K,N] -> int32[M,N] or requantized int8[M,N]."""
+    """x[int8 M,K] @ w[int8 K,N] with the requested fused epilogue."""
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
         f"pad shapes to block multiples first: {(m, k, n)} vs {(bm, bk, bn)}")
-    if requant is None:
-        s1 = mult = s2 = 0
+    if epilogue is None:
+        epilogue = "requant" if requant is not None else "none"
+    assert epilogue in EPILOGUES, epilogue
+    stream_dtype = out_dtype  # scaled epilogues: the residual-stream dtype
+    if epilogue == "none":
         out_dtype = jnp.int32
-    else:
+    elif epilogue.startswith("requant") or epilogue == "scaled_gelu":
+        out_dtype = jnp.int8
+    elif epilogue == "scaled_add":
+        # standard promotion: a float32 residual widens the output
+        out_dtype = jnp.promote_types(stream_dtype, residual.dtype)
+    s1 = mult = s2 = 0
+    if requant is not None:
         s1, mult, s2 = requant.s1, requant.mult, requant.s2
+    g_s1 = g_mult = g_s2 = 0
+    if epilogue.endswith("gelu"):
+        assert gelu_scale is not None
+        gp = gelu_requant_params(gelu_scale)
+        g_s1, g_mult, g_s2 = gp.s1, gp.mult, gp.s2
+    has_scales = epilogue.startswith("scaled")
+    has_bias = bias is not None
+    has_res = epilogue.endswith("add")
+
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
+    operands = [x, w]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    if has_scales:
+        assert x_scale is not None and w_scale is not None
+        operands += [x_scale, w_scale.reshape(1, n)]
+        in_specs += [
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ]
+    if has_bias:
+        operands.append(bias.reshape(1, n))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if has_res:
+        assert residual is not None and residual.shape == (m, n)
+        operands.append(residual)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+
     kernel = functools.partial(
-        _kernel, n_k=n_k, s1=s1, mult=mult, s2=s2, out_dtype=out_dtype)
+        _kernel, n_k=n_k, epilogue=epilogue, s1=s1, mult=mult, s2=s2,
+        gelu_scale=0.0 if gelu_scale is None else gelu_scale,
+        g_s1=g_s1, g_mult=g_mult, g_s2=g_s2, has_scales=has_scales,
+        has_bias=has_bias, has_res=has_res, stream_dtype=stream_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), I32)],
         interpret=interpret_mode() if interpret is None else interpret,
-    )(x, w)
+    )(*operands)

@@ -3,6 +3,9 @@
 Elementwise I-BERT polynomial on 2D blocks; int32 in (pre-activation
 accumulator or int8 payload), int8 out with a static output scale —
 bit-identical to ``core.inumerics.i_gelu_int8``.
+
+``gelu_block`` is the traced core, shared with the fused GEMM epilogue in
+``int8_gemm.py`` (requantize+GELU without the int32 HBM round trip).
 """
 from __future__ import annotations
 
@@ -14,14 +17,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core import inumerics as inum
-from .common import interpret_mode
+from .common import interpret_mode, requant_block
 
 I32 = jnp.int32
 _ERF_A, _ERF_B, _ERF_C = -0.2888, -1.769, 1.0
 
 
-def _kernel(x_ref, out_ref, *, scale: float, s1: int, mult: int, s2: int):
-    q = x_ref[...].astype(I32)
+def gelu_requant_params(scale: float) -> inum.RequantParams:
+    """The same tight-bound requant params inumerics.i_gelu_int8 derives."""
+    s_in = scale / math.sqrt(2.0)
+    s_erf = abs(_ERF_A * s_in * s_in)
+    s_out_raw = s_erf * scale / 2.0
+    acc_bound = int(127 * 2 / s_erf) + 127
+    return inum.compute_requant_params(s_out_raw / gelu_out_scale(scale),
+                                       acc_bound=acc_bound)
+
+
+def gelu_block(q, *, scale: float, s1: int, mult: int, s2: int):
+    """Traced int GELU of one int32 block -> int8-range int32 values."""
     s_in = scale / math.sqrt(2.0)
     q_b = int(math.floor(_ERF_B / s_in))
     q_c = int(math.floor(_ERF_C / (_ERF_A * s_in * s_in)))
@@ -31,13 +44,13 @@ def _kernel(x_ref, out_ref, *, scale: float, s1: int, mult: int, s2: int):
     q_abs = jnp.minimum(jnp.abs(q), -q_b)
     q_erf = sgn * ((q_abs + q_b) * (q_abs + q_b) + q_c)
     acc = -(q * (q_erf + q_one))  # negate: s_out < 0 in the raw formula
-    # requantize to int8
-    if s1 > 0:
-        acc = (acc + (1 << (s1 - 1))) >> s1
-    acc = jnp.clip(acc, -(1 << 15), (1 << 15) - 1) * mult
-    if s2 > 0:
-        acc = (acc + (1 << (s2 - 1))) >> s2
-    out_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
+    return requant_block(acc, s1, mult, s2)
+
+
+def _kernel(x_ref, out_ref, *, scale: float, s1: int, mult: int, s2: int):
+    q = x_ref[...].astype(I32)
+    out_ref[...] = gelu_block(q, scale=scale, s1=s1, mult=mult,
+                              s2=s2).astype(jnp.int8)
 
 
 def gelu_out_scale(scale: float) -> float:
@@ -58,13 +71,7 @@ def int_gelu(
     x2 = x.reshape(-1, n)
     m = x2.shape[0]
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
-    # derive the same requant params as inumerics.i_gelu_int8 (tight bound)
-    s_in = scale / math.sqrt(2.0)
-    s_erf = abs(_ERF_A * s_in * s_in)
-    s_out_raw = s_erf * scale / 2.0
-    acc_bound = int(127 * 2 / s_erf) + 127
-    p = inum.compute_requant_params(s_out_raw / gelu_out_scale(scale),
-                                    acc_bound=acc_bound)
+    p = gelu_requant_params(scale)
     kernel = functools.partial(_kernel, scale=scale, s1=p.s1, mult=p.mult, s2=p.s2)
     out = pl.pallas_call(
         kernel,

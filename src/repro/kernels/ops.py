@@ -1,11 +1,19 @@
 """Public jit'd entry points for the kernels package.
 
 Call sites (models, serving engine) go through these wrappers, which handle
-arbitrary shapes (padding to block multiples), choose block sizes, and fall
-back to the pure-jnp reference implementation when Pallas is unavailable
-(e.g. the 512-device dry-run on the CPU backend, where interpret-mode
-execution would be prohibitive).  ``set_backend("pallas"|"jnp")`` flips the
-default; real-TPU deployments use "pallas".
+arbitrary shapes (padding to block multiples), pick block sizes per
+(shape, dtype, backend) via ``kernels.autotune`` (cost-model-seeded table
+with an optional measured cache — no hardcoded tiles), and fall back to the
+pure-jnp reference implementation when Pallas is unavailable (e.g. the
+512-device dry-run on the CPU backend, where interpret-mode execution would
+be prohibitive).  ``set_backend("pallas"|"jnp")`` flips the default;
+real-TPU deployments use "pallas".
+
+Fused epilogue entry points (``gemm_i8_gelu``, ``gemm_i8_add``,
+``gemm_w8a8``) keep the int32 GEMM accumulator in-register instead of
+round-tripping it through HBM between the matmul and its consumer; their
+jnp paths are the exact unfused compositions, so both backends are
+bit-identical.
 """
 from __future__ import annotations
 
@@ -13,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.inumerics import RequantParams
-from . import ref
+from . import autotune, ref
 from .common import pad_to
 from .conv2d import int8_conv2d
 from .flash_attention import flash_attention
@@ -41,26 +49,105 @@ def _use_pallas() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# GEMM family
+# ---------------------------------------------------------------------------
+
+
+def _gemm_2d(x: jax.Array):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    return x2, lead, x2.shape[0]
 
 
 def gemm_i8(x: jax.Array, w: jax.Array, requant: RequantParams | None = None,
             out_dtype=jnp.int32) -> jax.Array:
-    """int8 GEMM on arbitrary [..., K] x [K, N]; pads to MXU blocks."""
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    n = w.shape[-1]
+    """int8 GEMM on arbitrary [..., K] x [K, N]; pads to tuned blocks."""
+    x2, lead, m = _gemm_2d(x)
+    k, n = w.shape
     if not _use_pallas():
-        out = ref.int8_gemm_ref(x.reshape(-1, k), w, requant, out_dtype)
+        out = ref.int8_gemm_ref(x2, w, requant, out_dtype)
         return out.reshape(*lead, n)
-    x2 = x.reshape(-1, k)
-    m = x2.shape[0]
-    bm = bn = bk = 128
+    bm, bn, bk = autotune.gemm_blocks(m, k, n)
     xp = pad_to(x2, (bm, bk))
     wp = pad_to(w, (bk, bn))
     out = int8_gemm(xp, wp, requant=requant,
                     out_dtype=jnp.int8 if requant is not None else jnp.int32,
                     bm=bm, bn=bn, bk=bk)
     return out[:m, :n].reshape(*lead, n)
+
+
+def gemm_i8_gelu(x: jax.Array, w: jax.Array, gelu_scale: float) -> jax.Array:
+    """Fused ``gemm_i8 -> gelu_i8``: integer GELU of the int32 accumulator
+    at a static scale, int8 out (dequant with ``gelu_out_scale``).  The
+    int32 intermediate never touches HBM on the pallas path."""
+    x2, lead, m = _gemm_2d(x)
+    k, n = w.shape
+    if not _use_pallas():
+        return ref.int8_gemm_gelu_ref(x2, w, gelu_scale).reshape(*lead, n)
+    bm, bn, bk = autotune.gemm_blocks(m, k, n)
+    out = int8_gemm(pad_to(x2, (bm, bk)), pad_to(w, (bk, bn)),
+                    epilogue="requant_gelu", gelu_scale=gelu_scale,
+                    bm=bm, bn=bn, bk=bk)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def gemm_i8_add(x: jax.Array, w: jax.Array, requant: RequantParams,
+                residual: jax.Array) -> jax.Array:
+    """Fused ``requant(gemm_i8) + residual`` with int8 saturation — the
+    integer residual-stream form of out-projection + skip connection."""
+    x2, lead, m = _gemm_2d(x)
+    k, n = w.shape
+    r2 = residual.reshape(-1, n)
+    if not _use_pallas():
+        return ref.int8_gemm_add_ref(x2, w, requant, r2).reshape(*lead, n)
+    bm, bn, bk = autotune.gemm_blocks(m, k, n)
+    out = int8_gemm(pad_to(x2, (bm, bk)), pad_to(w, (bk, bn)),
+                    requant=requant, epilogue="requant_add",
+                    residual=pad_to(r2, (bm, bn)), bm=bm, bn=bn, bk=bk)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def gemm_w8a8(x_q: jax.Array, x_scale: jax.Array, w_q: jax.Array,
+              w_scale: jax.Array, bias: jax.Array | None = None,
+              residual: jax.Array | None = None,
+              gelu_scale: float | None = None,
+              out_dtype=jnp.bfloat16) -> jax.Array:
+    """W8A8 linear with the dequant epilogue fused into the GEMM.
+
+    x_q [..., K] int8 with per-row scales x_scale [..., 1]; w_q [K, N] int8
+    with per-col scales w_scale [N].  Returns out_dtype [..., N] — or, with
+    ``gelu_scale``, the int8 GELU payload (dequant with gelu_out_scale).
+    """
+    x2, lead, m = _gemm_2d(x_q)
+    k, n = w_q.shape
+    xs2 = x_scale.reshape(-1, 1)
+    r2 = None if residual is None else residual.reshape(-1, n)
+    if not _use_pallas():
+        out = ref.gemm_w8a8_ref(x2, xs2, w_q, w_scale, bias=bias,
+                                residual=r2, gelu_scale=gelu_scale,
+                                out_dtype=out_dtype)
+        return out.reshape(*lead, n)
+    bm, bn, bk = autotune.gemm_blocks(m, k, n)
+    if gelu_scale is not None:
+        epi = "scaled_gelu"
+    elif r2 is not None:
+        epi = "scaled_add"
+    else:
+        epi = "scaled"
+    out = int8_gemm(
+        pad_to(x2, (bm, bk)), pad_to(w_q, (bk, bn)),
+        epilogue=epi, gelu_scale=gelu_scale,
+        x_scale=pad_to(xs2, (bm, 1)),
+        w_scale=pad_to(w_scale.reshape(1, n), (1, bn)),
+        bias=None if bias is None else pad_to(bias.reshape(1, n), (1, bn)),
+        residual=None if r2 is None else pad_to(r2, (bm, bn)),
+        out_dtype=out_dtype, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# row-wise integer kernels
+# ---------------------------------------------------------------------------
 
 
 def softmax_i8(x: jax.Array, scale: float, mask=None) -> jax.Array:
@@ -70,7 +157,7 @@ def softmax_i8(x: jax.Array, scale: float, mask=None) -> jax.Array:
     n = x.shape[-1]
     x2 = x.reshape(-1, n)
     m = x2.shape[0]
-    bm = 8
+    bm = autotune.rowwise_blocks(m, n)
     xp = pad_to(x2, (bm, 1))
     mp = pad_to(mask.reshape(-1, n), (bm, 1)) if mask is not None else None
     out = int_softmax(xp, scale, mask=mp, bm=bm)
@@ -85,7 +172,7 @@ def layernorm_i8(x: jax.Array, gamma_q: jax.Array, beta_q: jax.Array,
     d = x.shape[-1]
     x2 = x.reshape(-1, d)
     m = x2.shape[0]
-    bm = 8
+    bm = autotune.rowwise_blocks(m, d)
     xp = pad_to(x2, (bm, 1))
     out = int_layernorm(xp, gamma_q, beta_q, rms_only=rms_only, bm=bm)
     return out[:m].reshape(*lead, d)
@@ -98,7 +185,7 @@ def gelu_i8(x: jax.Array, scale: float) -> jax.Array:
     n = x.shape[-1]
     x2 = x.reshape(-1, n)
     m = x2.shape[0]
-    bm, bn = 8, 128
+    bm, bn = autotune.elementwise_blocks(m, n)
     xp = pad_to(x2, (bm, bn))
     out = int_gelu(xp, scale, bm=bm, bn=bn)
     return out[:m, :n].reshape(*lead, n)
@@ -111,8 +198,9 @@ def quant_rows(x: jax.Array):
     d = x.shape[-1]
     x2 = x.reshape(-1, d)
     m = x2.shape[0]
-    xp = pad_to(x2, (8, 1))
-    q, s = quantize_rows(xp, bm=8)
+    bm = autotune.rowwise_blocks(m, d, dtype="f32")
+    xp = pad_to(x2, (bm, 1))
+    q, s = quantize_rows(xp, bm=bm)
     return q[:m].reshape(*lead, d), s[:m].reshape(*lead, 1)
 
 
@@ -123,8 +211,9 @@ def requant(x: jax.Array, params: RequantParams) -> jax.Array:
     n = x.shape[-1]
     x2 = x.reshape(-1, n)
     m = x2.shape[0]
-    xp = pad_to(x2, (8, 128))
-    out = requantize_i32(xp, params, bm=8, bn=128)
+    bm, bn = autotune.elementwise_blocks(m, n)
+    xp = pad_to(x2, (bm, bn))
+    out = requantize_i32(xp, params, bm=bm, bn=bn)
     return out[:m, :n].reshape(*lead, n)
 
 
@@ -134,21 +223,24 @@ def conv2d_i8(x, w, bias, requant_params=None):
     return int8_conv2d(x, w, bias, requant_params)
 
 
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
 def attention(q, k, v, causal=True, scale=None):
     if not _use_pallas():
         return ref.flash_attention_ref(q, k, v, causal, scale)
-    s, skv = q.shape[2], k.shape[2]
-    bq = 128 if s % 128 == 0 else (s if s <= 128 else 8)
-    bk = 128 if skv % 128 == 0 else (skv if skv <= 128 else 8)
+    s, skv, d = q.shape[2], k.shape[2], q.shape[3]
+    bq, bk = autotune.attention_blocks(s, skv, d)
     return flash_attention(q, k, v, causal=causal, scale=scale, bq=bq, bk=bk)
 
 
 def attention_i8(q, k, v, scale, causal=True):
     if not _use_pallas():
         return ref.int8_flash_attention_ref(q, k, v, scale, causal)
-    s, skv = q.shape[2], k.shape[2]
-    bq = 128 if s % 128 == 0 else (s if s <= 128 else 8)
-    bk = 128 if skv % 128 == 0 else (skv if skv <= 128 else 8)
+    s, skv, d = q.shape[2], k.shape[2], q.shape[3]
+    bq, bk = autotune.attention_blocks(s, skv, d, dtype="int8")
     return int8_flash_attention(q, k, v, scale, causal=causal, bq=bq, bk=bk)
 
 
@@ -160,7 +252,8 @@ def decode_attention_int8kv(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
         return ref.int8_kv_decode_attention_ref(
             q, k_q, k_s, v_q, v_s, pos_ids, qpos, scale, window)
     from .int8_kv_decode_attention import int8_kv_decode_attention
-    s = k_q.shape[1]
-    bk = 128 if s % 128 == 0 else (s if s <= 128 else 8)
+    s, d = k_q.shape[1], k_q.shape[3]
+    g = q.shape[1] // k_q.shape[2]
+    bk = autotune.decode_blocks(s, d, g)
     return int8_kv_decode_attention(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
                                     scale=scale, window=window, bk=bk)

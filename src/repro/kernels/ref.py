@@ -27,6 +27,43 @@ def int8_gemm_ref(x, w, requant=None, out_dtype=jnp.int32):
     return inum.requantize(acc, requant).astype(jnp.int8)
 
 
+def int8_gemm_gelu_ref(x, w, gelu_scale):
+    """Unfused composition the fused requant+GELU epilogue must match
+    bit-for-bit: int32 GEMM accumulator -> integer GELU (requant inside)."""
+    acc = int8_gemm_ref(x, w)
+    return int_gelu_ref(acc, gelu_scale)
+
+
+def int8_gemm_add_ref(x, w, requant, residual):
+    """Unfused composition of the requant+residual-add epilogue: int32 GEMM
+    -> requantize -> saturating int8 residual add."""
+    q = inum.requantize(int8_gemm_ref(x, w), requant)
+    return jnp.clip(q + residual.astype(I32), -128, 127).astype(jnp.int8)
+
+
+def gemm_w8a8_ref(x_q, x_scale, w_q, w_scale, bias=None, residual=None,
+                  gelu_scale=None, out_dtype=jnp.bfloat16):
+    """Unfused W8A8 linear: int8 GEMM -> f32 rescale (-> int GELU | + res).
+
+    Mirrors models.layers.linear_w8a8 (+ the integer ``activation`` /
+    residual add that followed it) exactly, including the bf16 cast of the
+    residual stream before activation quantization — the fused ``scaled``
+    epilogues are bit-identical to this.
+    """
+    acc = int8_gemm_ref(x_q, w_q)
+    h = acc.astype(jnp.float32) * x_scale * w_scale
+    if bias is not None:
+        h = h + bias
+    if gelu_scale is not None:
+        h = h.astype(out_dtype).astype(jnp.float32)
+        q = jnp.clip(jnp.round(h / gelu_scale), -128, 127).astype(I32)
+        return int_gelu_ref(q, gelu_scale)
+    h = h.astype(out_dtype)
+    if residual is not None:
+        h = h + residual
+    return h
+
+
 def int_softmax_ref(x, scale, mask=None):
     return inum.i_softmax(x.astype(I32), scale, mask=mask).astype(jnp.int8)
 

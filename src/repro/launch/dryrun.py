@@ -165,6 +165,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per computation
+        ca = ca[0] if ca else {}
     text = compiled.as_text()
     hlo = hlo_analysis.analyze(text)
     n_dev = mesh.size

@@ -9,12 +9,21 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: axis_types only exists on newer jax
+    (0.4.x infers Auto axes, which is what we want anyway)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips with multi_pod=True."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
@@ -24,10 +33,8 @@ def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
     e.g. 256 chips by rebuilding (data', model) and re-sharding.
     """
     assert n_devices % model_parallel == 0, (n_devices, model_parallel)
-    shape = (n_devices // model_parallel, model_parallel)
-    return jax.make_mesh(
-        shape, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n_devices // model_parallel, model_parallel),
+                      ("data", "model"))
 
 
 def mesh_axis_size(mesh, name: str) -> int:

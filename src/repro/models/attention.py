@@ -265,6 +265,7 @@ def attention(
     kv_source: jax.Array | None = None,  # cross-attention source features
     cross_kv: tuple | None = None,       # precomputed (xk, xv) — decode path
     window: int = 0,
+    residual: jax.Array | None = None,   # skip input: folded into out-proj
 ) -> tuple[jax.Array, dict | None]:
     b, t, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -330,5 +331,8 @@ def attention(
             out = _sdpa(q, k, v, positions, positions, scale, dtype,
                         causal=True, window=window)
     out = out.astype(dtype).reshape(b, t, hq * hd)
-    out = apply_linear(out, params["wo"], mode, use_hint=("tp", None))
+    # the residual add rides the out-projection (integer path: fused GEMM
+    # epilogue — the projection output never round-trips before the skip)
+    out = apply_linear(out, params["wo"], mode, use_hint=("tp", None),
+                       residual=residual)
     return shard_hint(out, "dp", "sp", None), cache

@@ -145,10 +145,10 @@ def block_forward(
         # SP->TP boundary: gather the bf16 norm output (not the f32 norm
         # intermediate GSPMD would otherwise pick — 2x ICI bytes)
         h = shard_hint(h, "dp", None, None)
-        a, kv = attention(params["attn"], h, cfg, mode, positions,
+        # skip connection folds into the out-projection epilogue
+        x, kv = attention(params["attn"], h, cfg, mode, positions,
                           cache=None if state is None else state["kv"],
-                          window=window)
-        x = x + a
+                          window=window, residual=x)
         if state is not None:
             new_state = dict(state, kv=kv)
         h = apply_norm(x, params["norm2"], cfg, mode)

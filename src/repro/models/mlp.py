@@ -6,7 +6,13 @@ import jax.numpy as jnp
 
 from ..dist.sharding import shard_hint
 from .config import ArchConfig
-from .layers import ExecMode, activation, apply_linear, dense_init
+from .layers import (
+    ExecMode,
+    activation,
+    apply_linear,
+    dense_init,
+    linear_gelu_w8a8,
+)
 
 
 def init_mlp_params(key, cfg: ArchConfig, d_ff: int | None = None,
@@ -23,12 +29,21 @@ def init_mlp_params(key, cfg: ArchConfig, d_ff: int | None = None,
 
 
 def mlp(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Array:
-    h = apply_linear(x, params["w_in"], mode, use_hint=(None, "tp"))
-    if "w_gate" in params:
-        g = apply_linear(x, params["w_gate"], mode, use_hint=(None, "tp"))
-        h = activation(g, cfg.activation, mode) * h
+    if ("w_gate" not in params and cfg.activation == "gelu"
+            and mode.integer and isinstance(params["w_in"], dict)):
+        # fused up-projection + integer GELU: the GEMM epilogue requantizes
+        # and applies the GELU polynomial in-register (bit-identical to the
+        # unfused linear -> activation composition)
+        w_q = shard_hint(params["w_in"]["w_q"], None, "tp")
+        h = linear_gelu_w8a8(x, w_q, params["w_in"]["scale"],
+                             compute_dtype=mode.compute_dtype)
     else:
-        h = activation(h, cfg.activation, mode)
+        h = apply_linear(x, params["w_in"], mode, use_hint=(None, "tp"))
+        if "w_gate" in params:
+            g = apply_linear(x, params["w_gate"], mode, use_hint=(None, "tp"))
+            h = activation(g, cfg.activation, mode) * h
+        else:
+            h = activation(h, cfg.activation, mode)
     h = shard_hint(h, "dp", None, "tp")  # hidden: TP region, seq gathered
     out = apply_linear(h, params["w_out"], mode, use_hint=("tp", None))
     return shard_hint(out, "dp", "sp", None)

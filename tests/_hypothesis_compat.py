@@ -1,0 +1,53 @@
+"""Deterministic fallback for ``hypothesis`` on containers that lack it.
+
+Provides just the surface test_inumerics.py uses — ``given``, ``settings``,
+and ``st.integers`` / ``st.floats`` — by running each property test over a
+fixed number of seeded-RNG samples.  No shrinking, no database: property
+COVERAGE is preserved, minimal-counterexample reporting is not.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng):
+        return self._sampler(rng)
+
+
+class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def floats(lo: float, hi: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    # NOTE: no functools.wraps — copying __wrapped__ would make pytest read
+    # the original signature and treat the strategy params as fixtures.
+    def deco(fn):
+        def wrapper(self):
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(self, *[s.sample(rng) for s in strategies])
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -222,6 +222,142 @@ class TestInt8KVDecodeAttention:
         np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
+class TestInt8KVDecodeAttentionDense:
+    """Satellite coverage: the decode kernel vs a DENSE f32 oracle built
+    in-test (not ref.py): ring-buffer pos_ids masking after wraparound,
+    the exact sliding-window bound, and GQA group handling."""
+
+    def _dense(self, q, kq, ks, vq, vs, pos, qpos, window=0):
+        """Dense f32 attention over the dequantized cache, masks from
+        first principles."""
+        q = np.asarray(q, np.float32)
+        k = np.asarray(kq, np.float32) * np.asarray(ks)
+        v = np.asarray(vq, np.float32) * np.asarray(vs)
+        pos = np.asarray(pos)
+        b, hq, d = q.shape
+        s, hkv = k.shape[1], k.shape[2]
+        out = np.zeros((b, hq, d), np.float32)
+        for bi in range(b):
+            for h in range(hq):
+                kv_h = h // (hq // hkv)  # GQA: queries share KV groups
+                valid = (pos[bi] >= 0) & (pos[bi] <= int(qpos[bi]))
+                if window:
+                    valid &= pos[bi] > (int(qpos[bi]) - window)
+                logits = (k[bi, :, kv_h] @ q[bi, h]) / np.sqrt(d)
+                logits = np.where(valid, logits, -1e30)
+                p = np.exp(logits - logits.max())
+                p = p / p.sum()
+                out[bi, h] = p @ v[bi, :, kv_h]
+        return out
+
+    def _ring_cache(self, rng, cfg, b, s, n_tokens):
+        """Write n_tokens (> S for wraparound) through the REAL model ring
+        cache so pos_ids carry genuine overwrite state."""
+        from repro.models.attention import _write_cache, init_cache
+        cache = init_cache(cfg, b, s, int8=True)
+        kf = rng.normal(size=(b, n_tokens, cfg.n_kv_heads, cfg.head_dim))
+        vf = rng.normal(size=(b, n_tokens, cfg.n_kv_heads, cfg.head_dim))
+        for t in range(n_tokens):
+            cache = _write_cache(
+                cache,
+                jnp.asarray(kf[:, t:t + 1], jnp.float32),
+                jnp.asarray(vf[:, t:t + 1], jnp.float32),
+                jnp.full((b, 1), t, jnp.int32))
+        return cache
+
+    def _cfg(self, hq=4, hkv=2, d=32):
+        from repro.models.config import ArchConfig
+        return ArchConfig(name="t", family="dense", n_layers=1, d_model=hq * d,
+                          n_heads=hq, n_kv_heads=hkv, d_ff=4, vocab_size=8,
+                          d_head=d)
+
+    def _run_kernel(self, q, cache, qpos, window=0):
+        from repro.kernels.int8_kv_decode_attention import (
+            int8_kv_decode_attention,
+        )
+        return int8_kv_decode_attention(
+            q, cache["k"], cache["k_s"], cache["v"], cache["v_s"],
+            cache["pos_ids"], qpos, window=window, bk=32)
+
+    def test_ring_wraparound_masks_overwritten_slots(self, rng):
+        """After writing 1.5x the cache length, slot i holds position
+        i + S for the first half: the kernel must attend to the LATEST
+        positions only, exactly like the dense oracle."""
+        cfg = self._cfg()
+        b, s, n_tok = 2, 64, 96
+        cache = self._ring_cache(rng, cfg, b, s, n_tok)
+        # wraparound happened: slots 0..31 hold positions 64..95
+        assert int(np.asarray(cache["pos_ids"])[0, 0]) == 64
+        q = jnp.asarray(rng.normal(size=(b, cfg.n_heads, cfg.head_dim)),
+                        jnp.float32)
+        qpos = jnp.full((b,), n_tok - 1, jnp.int32)
+        got = np.asarray(self._run_kernel(q, cache, qpos), np.float32)
+        want = self._dense(q, cache["k"], cache["k_s"], cache["v"],
+                           cache["v_s"], cache["pos_ids"], qpos)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_sliding_window_exact_boundary(self, rng):
+        """window=W keeps exactly positions (qpos-W, qpos]: check both the
+        kernel and the oracle drop position qpos-W and keep qpos-W+1."""
+        cfg = self._cfg(hq=2, hkv=2)
+        b, s, w = 1, 64, 16
+        cache = self._ring_cache(rng, cfg, b, s, s)
+        q = jnp.asarray(rng.normal(size=(b, cfg.n_heads, cfg.head_dim)),
+                        jnp.float32)
+        qpos = jnp.full((b,), s - 1, jnp.int32)
+        got = np.asarray(self._run_kernel(q, cache, qpos, window=w),
+                         np.float32)
+        want = self._dense(q, cache["k"], cache["k_s"], cache["v"],
+                           cache["v_s"], cache["pos_ids"], qpos, window=w)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+        # boundary sanity on the oracle itself: zero out the newest W keys'
+        # values -> output must change; zero only keys OUTSIDE the window
+        # -> output must not change
+        vq = np.asarray(cache["v"]).copy()
+        vq[:, : s - w] = 0  # positions 0..47: outside (qpos-16, qpos]
+        outside = self._dense(q, cache["k"], cache["k_s"], jnp.asarray(vq),
+                              cache["v_s"], cache["pos_ids"], qpos, window=w)
+        np.testing.assert_allclose(outside, want, rtol=2e-5, atol=2e-5)
+
+    def test_gqa_groups_read_their_own_kv_head(self, rng):
+        """6 query heads over 3 KV heads: making KV head j distinctive must
+        move exactly query heads 2j and 2j+1 (group mapping q_h -> q_h//g)."""
+        cfg = self._cfg(hq=6, hkv=3)
+        b, s = 1, 32
+        cache = self._ring_cache(rng, cfg, b, s, s)
+        q = jnp.asarray(rng.normal(size=(b, 6, cfg.head_dim)), jnp.float32)
+        qpos = jnp.full((b,), s - 1, jnp.int32)
+        base = np.asarray(self._run_kernel(q, cache, qpos), np.float32)
+        want = self._dense(q, cache["k"], cache["k_s"], cache["v"],
+                           cache["v_s"], cache["pos_ids"], qpos)
+        np.testing.assert_allclose(base, want, rtol=2e-5, atol=2e-5)
+        for j in range(3):
+            vq = np.asarray(cache["v"]).copy()
+            vq[:, :, j] = 0
+            got = np.asarray(self._run_kernel(
+                q, dict(cache, v=jnp.asarray(vq)), qpos), np.float32)
+            moved = [h for h in range(6)
+                     if np.abs(got[0, h] - base[0, h]).max() > 1e-6]
+            assert moved == [2 * j, 2 * j + 1]
+
+    def test_partial_fill_and_ops_dispatch(self, rng):
+        """ops-level entry (autotuned bk) on a partially filled cache."""
+        cfg = self._cfg()
+        b, s, fill = 2, 128, 17
+        cache = self._ring_cache(rng, cfg, b, s, fill)
+        q = jnp.asarray(rng.normal(size=(b, cfg.n_heads, cfg.head_dim)),
+                        jnp.float32)
+        qpos = jnp.full((b,), fill - 1, jnp.int32)
+        want = self._dense(q, cache["k"], cache["k_s"], cache["v"],
+                           cache["v_s"], cache["pos_ids"], qpos)
+        for backend in ("jnp", "pallas"):
+            ops.set_backend(backend)
+            got = np.asarray(ops.decode_attention_int8kv(
+                q, cache["k"], cache["k_s"], cache["v"], cache["v_s"],
+                cache["pos_ids"], qpos), np.float32)
+            np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
 class TestSSDScan:
     """Chunked Mamba-2 SSD kernel vs the sequential-recurrence oracle."""
 

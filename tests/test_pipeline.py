@@ -6,7 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.pipeline import bubble_fraction, pipeline_apply, split_stages
+from repro.dist.pipeline import (
+    bubble_fraction,
+    pipeline_apply,
+    shard_map_compat,
+    split_stages,
+)
 
 
 def test_split_stages_shapes():
@@ -21,8 +26,7 @@ def test_bubble_fraction():
 
 
 def test_single_stage_schedule_matches_direct():
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("pod",))
     layers = jnp.asarray(
         np.random.default_rng(0).normal(size=(3, 8, 8)), jnp.float32)
     x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 2, 8)),
@@ -35,9 +39,8 @@ def test_single_stage_schedule_matches_direct():
         return pipeline_apply(layer_fn, stage_params, xs, axis_name="pod")
 
     with mesh:
-        out = jax.jit(jax.shard_map(
-            run, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
-            check_vma=False))(layers, x)
+        out = jax.jit(shard_map_compat(
+            run, mesh, in_specs=(P(), P()), out_specs=P()))(layers, x)
 
     def direct(h):
         for i in range(3):
