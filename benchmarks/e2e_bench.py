@@ -1,6 +1,7 @@
 """End-to-end benches on reduced configs: train step + decode throughput,
-bf16 vs w8a8 (paper technique), plus the roofline summary from the dry-run
-artifacts when present."""
+bf16 vs w8a8 (paper technique), serving-engine mixed prefill+decode traffic
+(chunked vs token-at-a-time prefill), plus the roofline summary from the
+dry-run artifacts when present."""
 from __future__ import annotations
 
 import glob
@@ -15,6 +16,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import init_params, init_states, forward
 from repro.quant import ptq_quantize_params
+from repro.serve import ServeConfig, ServingEngine
 from repro.serve.engine import decode_step
 from repro.train import AdamWConfig, TrainConfig, make_train_step
 from repro.train.optimizer import init_opt_state
@@ -57,12 +59,62 @@ def _decode_bench(arch: str, precision: str, reps: int = 5) -> tuple:
     return (f"e2e/decode_{arch}-reduced_{precision}", us, f"lanes={b}")
 
 
+_PARAMS_CACHE: dict = {}
+
+
+def _serve_params(arch: str, precision: str):
+    if (arch, precision) not in _PARAMS_CACHE:
+        p = init_params(jax.random.PRNGKey(0),
+                        get_config(arch, reduced=True))
+        if precision == "w8a8":
+            p = ptq_quantize_params(p)
+        _PARAMS_CACHE[(arch, precision)] = p
+    return _PARAMS_CACHE[(arch, precision)]
+
+
+def _serve_traffic(engine, n_requests: int, vocab: int) -> None:
+    """Mixed prefill+decode traffic: prompt lengths cycle short/medium/long
+    so prefill chunking and decode interleave (fixed seed, stable keys)."""
+    rng = np.random.default_rng(7)
+    lens = [5, 19, 33, 12, 47, 8]
+    for i in range(n_requests):
+        prompt = rng.integers(2, vocab, size=lens[i % len(lens)]).tolist()
+        engine.submit(prompt, max_new=8, request_id=i)
+
+
+def _serve_bench(arch: str, precision: str, chunk: int,
+                 n_requests: int = 6) -> tuple:
+    """tokens/sec for the serving engine on mixed traffic.  ``chunk=0`` is
+    the token-at-a-time baseline the chunked prefill must beat."""
+    cfg = get_config(arch, precision=precision, reduced=True)
+    params = _serve_params(arch, precision)
+    scfg = ServeConfig(batch_lanes=4, max_seq=128,
+                       int8_kv=(precision == "w8a8"),
+                       prefill_chunk=chunk, temperature=0.0)
+    # measure on a warmed engine (jit caches live on the engine closures)
+    engine = ServingEngine(params, cfg, scfg)
+    engine.warmup()
+    _serve_traffic(engine, n_requests, cfg.vocab_size)
+    t0 = time.time()
+    done = engine.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(d["tokens"]) for d in done)
+    mode = "chunked" if chunk else "tokenwise"
+    return (f"e2e/serve_mixed_{arch}-reduced_{precision}_{mode}",
+            dt / max(toks, 1) * 1e6,
+            f"tok_s={toks/dt:.1f};requests={n_requests};chunk={chunk}")
+
+
 def run(smoke: bool = False) -> list[tuple]:
     reps = 1 if smoke else 3
     rows = [
         _train_bench("codeqwen1.5-7b", reps=reps),
         _decode_bench("codeqwen1.5-7b", "bf16", reps=reps),
         _decode_bench("codeqwen1.5-7b", "w8a8", reps=reps),
+        _serve_bench("codeqwen1.5-7b", "bf16", chunk=0),
+        _serve_bench("codeqwen1.5-7b", "bf16", chunk=16),
+        _serve_bench("codeqwen1.5-7b", "w8a8", chunk=0),
+        _serve_bench("codeqwen1.5-7b", "w8a8", chunk=16),
     ]
     if not smoke:
         rows.insert(1, _train_bench("mixtral-8x7b"))

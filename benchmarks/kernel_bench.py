@@ -129,6 +129,15 @@ def _run_rows(small: bool, reps: int, backend: str) -> list[tuple]:
     rows.append((f"kernel/int8_attention_{si}/{backend}", us,
                  f"work=int8 QK+softmax+PV"))
 
+    # exact per-(token, head) PV dequant variant (serving prefill path)
+    vsc = jnp.asarray(np.abs(rng.normal(size=(1, 4, si, 1))) * 0.01 + 1e-4,
+                      jnp.float32)
+    us = _time(lambda a, s_: ops.attention_i8(a, a, a, scale=0.002,
+                                              v_scale=s_), qi, vsc,
+               reps=reps)
+    rows.append((f"kernel/int8_attention_pv_{si}/{backend}", us,
+                 f"work=int8 QK+softmax+f32 PV dequant"))
+
     # serving hot path: int8-KV single-token decode attention
     sd, hq, hkv, d = (128, 8, 2, 64)
     qd = jnp.asarray(rng.normal(size=(2, hq, d)), jnp.float32)

@@ -1,0 +1,75 @@
+"""Cheap doc link check: every file-looking reference in README.md and
+docs/*.md must exist.
+
+Two reference forms are checked:
+  * markdown links to local targets: ``[text](path)`` (non-http)
+  * backtick spans that look like file paths: contain a ``/`` and end in a
+    known source extension, e.g. ``src/repro/kernels/ops.py``
+
+Paths resolve against the repo root, then ``src/repro`` (so docs can say
+``kernels/ops.py`` the way the code's own docstrings do).  Anchors and
+``--flag`` strings are ignored.  Exit 1 with a list of dangling refs.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+EXTS = (".py", ".md", ".sh", ".json")
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+BACKTICK = re.compile(r"`([^`\s]+/[^`\s]+)`")
+
+
+def _exists(path: str) -> bool:
+    for base in (ROOT, os.path.join(ROOT, "src", "repro")):
+        if os.path.exists(os.path.join(base, path)):
+            return True
+    return False
+
+
+def check(doc: str) -> list[str]:
+    with open(doc) as f:
+        text = f.read()
+    bad = []
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not _exists(target):
+            bad.append(f"{os.path.relpath(doc, ROOT)}: [link] {target}")
+    for m in BACKTICK.finditer(text):
+        target = m.group(1).rstrip(".,;:")
+        if not target.endswith(EXTS) or target.startswith("-"):
+            continue
+        if "{" in target or "*" in target or "<" in target:
+            continue  # templated examples like gemm/{M}x{K}x{N}
+        if target.startswith("."):
+            continue  # generated artifacts (.autotune/measured.json)
+        if not _exists(target):
+            bad.append(f"{os.path.relpath(doc, ROOT)}: `{target}`")
+    return bad
+
+
+def main() -> int:
+    docs = [os.path.join(ROOT, "README.md")]
+    docs += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    missing_docs = [d for d in docs if not os.path.exists(d)]
+    if missing_docs:
+        for d in missing_docs:
+            print(f"MISSING DOC: {os.path.relpath(d, ROOT)}", file=sys.stderr)
+        return 1
+    bad = [ref for d in docs for ref in check(d)]
+    for ref in bad:
+        print(f"DANGLING REF: {ref}", file=sys.stderr)
+    if bad:
+        return 1
+    print(f"doc link check OK ({len(docs)} docs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

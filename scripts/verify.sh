@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification: full test suite + a ~30 s benchmark smoke that must
-# leave machine-readable perf artifacts at the repo root.
+# leave machine-readable perf artifacts at the repo root, an examples
+# smoke (quickstart + a 4-request serving drain), and a doc link check.
 #
 # Usage: scripts/verify.sh
 set -euo pipefail
@@ -18,4 +19,15 @@ for f in BENCH_kernels.json BENCH_e2e.json; do
         exit 1
     fi
 done
-echo "verify OK: tests green, BENCH_kernels.json + BENCH_e2e.json present"
+
+echo "== examples/quickstart smoke =="
+PYTHONPATH=src python examples/quickstart.py
+
+echo "== serving drain smoke (chunked prefill, 4 requests) =="
+PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --reduced \
+    --requests 4 --max-new 4 --lanes 2 --max-seq 64 --prefill-chunk 8
+
+echo "== doc link check =="
+python scripts/check_doc_links.py
+
+echo "verify OK: tests green, BENCH artifacts present, examples run, docs link-clean"

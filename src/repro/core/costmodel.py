@@ -151,6 +151,29 @@ def attention_tile_cost(s_q: int, s_kv: int, d: int, bq: int, bk: int,
     return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES
 
 
+def attention_pv_tile_cost(s_q: int, s_kv: int, d: int, bq: int,
+                           bk: int) -> float:
+    """Estimated cycles for one (batch*head) slice of the int8 attention
+    with exact per-(token, head) PV dequantization (three streaming passes
+    over int8 K — max, exp-sum, PV — the last also streaming V plus its
+    (bk, 1) f32 scale vector and accumulating f32 in VMEM)."""
+    gq, gk = _cdiv(s_q, bq), _cdiv(s_kv, bk)
+    vmem = ((bq * d + 2 * bk * d) * 1     # int8 q/k/v tiles
+            + bk * 4                      # v-scale vector
+            + bq * (bk + 2) * 4           # score tile + m/l columns
+            + bq * d * 4)                 # f32 PV accumulator
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    steps = gq * gk
+    # 3 passes restream K per query block; the PV matmul runs f32 (VPU/MXU
+    # 8x throughput penalty vs int8 is folded as 2x on the PV contraction)
+    compute = steps * (2 * (bq * bk * d) + 2 * (bq * bk * d)) \
+        / TPU_MACS_PER_CYCLE
+    hbm = (gq * (bq * d + gk * (3 * bk * d + bk * d + bk * 4))
+           ) / TPU_HBM_BYTES_PER_CYCLE
+    return max(compute, hbm) + 3 * steps * TPU_GRID_STEP_CYCLES
+
+
 def rowwise_tile_cost(m: int, n: int, bm: int,
                       in_bytes: int = 4, out_bytes: int = 1) -> float:
     """Estimated cycles for a row-blocked elementwise/reduction kernel

@@ -8,7 +8,8 @@ Kernels (each <name>.py holds the pl.pallas_call + BlockSpec):
   quantize             absmax row quantization + int32->int8 requant
   conv2d               int8 NHWC convolution (paper's conv benchmark)
   flash_attention      fused bf16 online-softmax attention
-  int8_flash_attention integer attention (int8 QK^T/softmax/PV), multi-pass
+  int8_flash_attention integer attention (int8 QK^T/softmax/PV), multi-pass;
+                       optional exact per-(token, head) PV dequant (v_scale)
   int8_kv_decode_attention  decode over the int8 ring cache (per-token-head
                        scales dequantized in-register; serving hot path)
 

@@ -78,6 +78,7 @@ def reset_measured_cache() -> None:
     _MEASURED = None
     gemm_blocks.cache_clear()
     attention_blocks.cache_clear()
+    attention_pv_blocks.cache_clear()
     decode_blocks.cache_clear()
     rowwise_blocks.cache_clear()
 
@@ -168,6 +169,28 @@ def attention_blocks(s_q: int, s_kv: int, d: int,
         for bk in k_tiles:
             c = costmodel.attention_tile_cost(s_q, s_kv, d, bq, bk,
                                               in_bytes=in_bytes)
+            if c < best_cost:
+                best, best_cost = (bq, bk), c
+    if best is None:  # every candidate blew VMEM: take the smallest tiles
+        best = (q_tiles[0], k_tiles[0])
+    return best
+
+
+@functools.lru_cache(maxsize=4096)
+def attention_pv_blocks(s_q: int, s_kv: int, d: int,
+                        backend: str = "pallas") -> tuple[int, int]:
+    """(bq, bk) for the int8 attention variant with fused per-(token, head)
+    PV dequantization (``attention_i8`` with ``v_scale``).  Its own key
+    family — the f32 PV accumulator and scale-vector streams shift the
+    optimum away from the plain int8 attention table."""
+    hit = _hit(f"attnpv/{s_q}x{s_kv}x{d}/int8/{backend}")
+    if hit:
+        return hit
+    best, best_cost = None, float("inf")
+    q_tiles, k_tiles = _divisor_tiles(s_q), _divisor_tiles(s_kv)
+    for bq in q_tiles:
+        for bk in k_tiles:
+            c = costmodel.attention_pv_tile_cost(s_q, s_kv, d, bq, bk)
             if c < best_cost:
                 best, best_cost = (bq, bk), c
     if best is None:  # every candidate blew VMEM: take the smallest tiles

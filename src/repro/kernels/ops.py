@@ -236,12 +236,21 @@ def attention(q, k, v, causal=True, scale=None):
     return flash_attention(q, k, v, causal=causal, scale=scale, bq=bq, bk=bk)
 
 
-def attention_i8(q, k, v, scale, causal=True):
+def attention_i8(q, k, v, scale, causal=True, v_scale=None):
+    """Integer attention (int8 QK^T -> i-softmax -> PV).  Without
+    ``v_scale``: int32 accumulator out (real value acc/127 * caller's
+    per-tensor s_v).  With ``v_scale`` [B,Hkv,Skv,1] f32 per-(token, head)
+    scales: exact in-kernel PV dequant, f32 attention output."""
     if not _use_pallas():
-        return ref.int8_flash_attention_ref(q, k, v, scale, causal)
+        return ref.int8_flash_attention_ref(q, k, v, scale, causal,
+                                            v_scale=v_scale)
     s, skv, d = q.shape[2], k.shape[2], q.shape[3]
-    bq, bk = autotune.attention_blocks(s, skv, d, dtype="int8")
-    return int8_flash_attention(q, k, v, scale, causal=causal, bq=bq, bk=bk)
+    if v_scale is not None:
+        bq, bk = autotune.attention_pv_blocks(s, skv, d)
+    else:
+        bq, bk = autotune.attention_blocks(s, skv, d, dtype="int8")
+    return int8_flash_attention(q, k, v, scale, causal=causal,
+                                v_scale=v_scale, bq=bq, bk=bk)
 
 
 def decode_attention_int8kv(q, k_q, k_s, v_q, v_s, pos_ids, qpos,

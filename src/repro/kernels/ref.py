@@ -141,20 +141,32 @@ def int8_kv_decode_attention_ref(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
     return o.reshape(b, hq, d).astype(q.dtype)
 
 
-def int8_flash_attention_ref(q, k, v, scale, causal=True):
-    """Bit-exact integer oracle of kernels.int8_flash_attention."""
+def int8_flash_attention_ref(q, k, v, scale, causal=True, v_scale=None):
+    """Bit-exact integer oracle of kernels.int8_flash_attention.
+
+    With ``v_scale`` (per-(token, head) scales, [B,Hkv,Skv,1] f32) the PV
+    contraction runs in f32 over the dequantized V rows and the result is
+    the final attention output (acc / 127) — the exact composition the
+    fused PV-dequant pass must reproduce.
+    """
     b, h, s, d = q.shape
     _, hkv, skv, _ = k.shape
     if hkv != h:
         rep = h // hkv
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
+        if v_scale is not None:
+            v_scale = jnp.repeat(v_scale, rep, axis=1)
     rshift = max(int(round(math.log2(math.sqrt(d)))), 0)
     sc = jnp.einsum("bhsd,bhtd->bhst", q.astype(I32), k.astype(I32)) >> rshift
     if causal:
         cmask = jnp.tril(jnp.ones((s, skv), bool), k=skv - s)
         sc = jnp.where(cmask, sc, -(2 ** 24))
     p = inum.i_softmax(sc, scale)  # int32 payload in [0,127]
+    if v_scale is not None:
+        vd = v.astype(jnp.float32) * v_scale                  # (B,H,Skv,D)
+        out = jnp.einsum("bhst,bhtd->bhsd", p.astype(jnp.float32), vd)
+        return out * (1.0 / 127.0)
     return jnp.einsum("bhst,bhtd->bhsd", p.astype(jnp.int8).astype(I32),
                       v.astype(I32))
 

@@ -1,8 +1,9 @@
-"""Serving launcher: batched decode with the continuous-batching engine.
+"""Serving launcher: chunked prefill + batched decode with the
+continuous-batching engine.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
-      --requests 16 --max-new 32 --int8-kv
+      --requests 16 --max-new 32 --int8-kv --prefill-chunk 16
 """
 from __future__ import annotations
 
@@ -31,6 +32,9 @@ def main() -> None:
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--w8a8", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="max tokens per batched prefill chunk "
+                         "(0 = legacy token-at-a-time prompt feed)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -48,7 +52,8 @@ def main() -> None:
     engine = ServingEngine(
         params, cfg,
         ServeConfig(batch_lanes=args.lanes, max_seq=args.max_seq,
-                    int8_kv=args.int8_kv, temperature=args.temperature),
+                    int8_kv=args.int8_kv, temperature=args.temperature,
+                    prefill_chunk=args.prefill_chunk, seed=args.seed),
         kv_source=kv_source)
 
     rng = np.random.default_rng(args.seed)
@@ -61,7 +66,9 @@ def main() -> None:
     total_tokens = sum(len(d["tokens"]) for d in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s, "
-          f"int8_kv={args.int8_kv}, precision={precision})")
+          f"int8_kv={args.int8_kv}, precision={precision}, "
+          f"chunk_buckets={engine.chunk_buckets})")
+    print(engine.stats_summary())
 
 
 if __name__ == "__main__":

@@ -88,7 +88,7 @@ def _cross_len(cfg: ArchConfig) -> int:
 
 
 def init_block_state(kind: str, cfg: ArchConfig, batch: int, max_seq: int,
-                     int8_kv: bool, dtype) -> dict | None:
+                     int8_kv: bool, dtype, window_slack: int = 0) -> dict | None:
     if kind in ("xattn", "dec"):
         # cross-attention KV is static per request: precomputed once
         # (models.lm.precompute_cross_states), never per decode step
@@ -101,8 +101,11 @@ def init_block_state(kind: str, cfg: ArchConfig, batch: int, max_seq: int,
     if kind in ("attn", "moe", "shared_attn"):
         return {"kv": init_cache(cfg, batch, max_seq, int8=int8_kv, dtype=dtype)}
     if kind in ("attn_swa", "moe_swa"):
+        # window_slack: extra ring slots so a prefill chunk's writes never
+        # evict keys still inside the window of its earliest query
         return {"kv": init_cache(cfg, batch, max_seq, int8=int8_kv,
-                                 window=cfg.sliding_window, dtype=dtype)}
+                                 window=cfg.sliding_window + window_slack,
+                                 dtype=dtype)}
     if kind == "mamba2":
         d_inner, nh, hd, ds = _mamba_dims(cfg)
         conv_ch = d_inner + 2 * ds

@@ -71,11 +71,18 @@ def init_params(key, cfg: ArchConfig) -> dict:
 
 
 def init_states(cfg: ArchConfig, batch: int, max_seq: int,
-                int8_kv: bool = False, dtype=DEFAULT_DTYPE) -> list:
-    """Stacked per-period states mirroring the params layout."""
+                int8_kv: bool = False, dtype=DEFAULT_DTYPE,
+                window_slack: int = 0) -> list:
+    """Stacked per-period states mirroring the params layout.
+
+    ``window_slack`` widens sliding-window ring caches by that many slots
+    (chunked prefill: a C-token chunk write must not evict keys still
+    inside the window of the chunk's earliest query — see docs/serving.md).
+    """
     states = []
     for kind in cfg.block_pattern:
-        st = init_block_state(kind, cfg, batch, max_seq, int8_kv, dtype)
+        st = init_block_state(kind, cfg, batch, max_seq, int8_kv, dtype,
+                              window_slack=window_slack)
         if st is None:
             states.append(None)
             continue

@@ -7,8 +7,27 @@ that admits queued requests into free batch lanes each iteration (requests
 carry their own position counters, so lanes mix sequences at different
 depths — the vLLM-style pattern restricted to static shapes).
 
-In w8a8 mode the KV cache is int8 with per-(token, head) scales and the
-prefill runs the integer attention kernel (paper technique at serving time).
+Prefill is CHUNKED and BATCHED: admitted prompts run through the jitted
+prefill program in fixed-size chunks, padded up to a small static set of
+bucket lengths (one compile per bucket, never per prompt length), and
+interleaved with decode iterations so lanes that are already generating
+keep generating while new prompts stream in.  Pad tokens carry position -1:
+the KV cache drops their writes (models/attention._write_cache) and their
+logits are never read.  State updates are lane-masked — a forward pass only
+commits the lanes that actually participated, so concurrent prefill/decode
+lanes never corrupt each other.  ``prefill_chunk=0`` restores the legacy
+token-at-a-time prompt feed (also the fallback for recurrent-state archs,
+where pad tokens would advance the recurrence).
+
+Sampling uses PER-LANE PRNG streams keyed by request submission id and
+position — lane count, admission order, and co-resident traffic never
+change a request's sampled tokens.
+
+In w8a8 mode the KV cache is int8 with per-(token, head) scales.  On the
+pallas backend the decode hot path dequantizes EXACTLY inside the fused
+int8-KV kernel's PV accumulation; chunked prefill reads the cache through
+the XLA dequant-then-attend path (same numerics contract — masking and
+scales from the cache, no approximation; see docs/serving.md).
 """
 from __future__ import annotations
 
@@ -22,6 +41,8 @@ import numpy as np
 
 from ..models import ArchConfig, forward, init_states, precompute_cross_states
 
+RECURRENT_KINDS = {"mamba2", "mlstm", "slstm"}
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
@@ -30,6 +51,8 @@ class ServeConfig:
     int8_kv: bool = False
     temperature: float = 0.0     # 0 = greedy
     eos_token: int = 1
+    prefill_chunk: int = 32      # max tokens per prefill chunk; 0 = legacy
+    seed: int = 0                # base of the per-lane PRNG tree
 
 
 def prefill_step(params, cfg: ArchConfig, tokens, positions, states,
@@ -48,10 +71,33 @@ def decode_step(params, cfg: ArchConfig, token, position, states,
     return logits[:, -1], states
 
 
-def _sample(logits, temperature: float, key):
+def _masked_commit(old_states, new_states, lane_mask):
+    """Keep ``new_states`` only for lanes in ``lane_mask`` (B,) bool.
+    State leaves are stacked (P, B, ...)."""
+    b = lane_mask.shape[0]
+
+    def sel(new, old):
+        m = lane_mask.reshape((1, b) + (1,) * (new.ndim - 2))
+        return jnp.where(m, new, old)
+
+    return jax.tree.map(sel, new_states, old_states)
+
+
+def _sample(logits, temperature: float, keys):
+    """Per-lane sampling: ``keys`` (B, 2) uint32, one PRNG stream per lane."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l / temperature)
+    )(keys, logits).astype(jnp.int32)
+
+
+def _pow2_bucket(n: int) -> int:
+    """Power-of-two histogram bucket for prefix-length stats."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 class ServingEngine:
@@ -64,27 +110,50 @@ class ServingEngine:
         self.scfg = serve_cfg
         self.kv_source = kv_source
         b = serve_cfg.batch_lanes
+        self._buckets = self._chunk_buckets()
+        # sliding-window ring caches get max-chunk slack slots: a C-token
+        # chunk write must not evict keys still inside the window of the
+        # chunk's earliest query (ring size W serves only C == 1)
+        self._window_slack = self._buckets[-1] if self._buckets else 0
         self.states = init_states(cfg, b, serve_cfg.max_seq,
-                                  int8_kv=serve_cfg.int8_kv)
-        self._prefill = jax.jit(
-            functools.partial(prefill_step, cfg=cfg, kv_source=kv_source))
-        self._decode = jax.jit(
-            functools.partial(decode_step, cfg=cfg, kv_source=kv_source))
+                                  int8_kv=serve_cfg.int8_kv,
+                                  window_slack=self._window_slack)
+
+        def _decode_masked(params, token, position, states, lane_mask,
+                           commit_all):
+            logits, new_states = decode_step(params, cfg, token, position,
+                                             states, kv_source=kv_source)
+            if commit_all:  # static: every lane participated, skip select
+                return logits, new_states
+            return logits, _masked_commit(states, new_states, lane_mask)
+
+        def _prefill_masked(params, tokens, positions, states, lane_mask,
+                            last_idx, commit_all):
+            logits, new_states = forward(params, cfg, tokens,
+                                         positions=positions, states=states,
+                                         kv_source=kv_source)
+            # each lane's last VALID token logits (chunks are right-padded)
+            lg = jnp.take_along_axis(logits, last_idx[:, None, None],
+                                     axis=1)[:, 0]
+            if commit_all:
+                return lg, new_states
+            return lg, _masked_commit(states, new_states, lane_mask)
+
+        # one compile per chunk bucket (static shapes), not per prompt len;
+        # commit_all is static — the all-lanes steady state skips the
+        # full-tree lane select (pure extra cache traffic there)
+        self._decode = jax.jit(_decode_masked, static_argnums=(5,))
+        self._prefill = jax.jit(_prefill_masked, static_argnums=(6,))
 
         def _reset_lane(states, lane):
             """Clear one batch lane back to its init value (fresh request)."""
             fresh = init_states(cfg, b, serve_cfg.max_seq,
-                                int8_kv=serve_cfg.int8_kv)
+                                int8_kv=serve_cfg.int8_kv,
+                                window_slack=self._window_slack)
             if kv_source is not None:
                 # static cross-attention KV: projected once, not per token
                 fresh = precompute_cross_states(params, cfg, kv_source, fresh)
-            mask = jnp.arange(b) == lane                    # (B,)
-
-            def sel(cur, init):
-                m = mask.reshape((1, b) + (1,) * (cur.ndim - 2))
-                return jnp.where(m, init, cur)
-
-            return jax.tree.map(sel, states, fresh)
+            return _masked_commit(states, fresh, jnp.arange(b) == lane)
 
         self._reset_lane = jax.jit(_reset_lane, donate_argnums=(0,))
         if kv_source is not None:
@@ -94,14 +163,76 @@ class ServingEngine:
         self.lane_pos = np.zeros(b, np.int32)
         self.lane_active = np.zeros(b, bool)
         self.lane_request: list[Any] = [None] * b
+        self.lane_keys = jnp.zeros((b, 2), jnp.uint32)
+        self.base_key = jax.random.PRNGKey(serve_cfg.seed)
         self.queue: list[dict] = []
         self.finished: list[dict] = []
-        self.key = jax.random.PRNGKey(0)
+        self._submitted = 0
+        self.stats: dict[str, Any] = {
+            "requests": 0, "prefill_tokens": 0, "pad_tokens": 0,
+            "prefill_chunks": {}, "prefix_len_hist": {},
+            "decode_steps": 0, "legacy_prefill_tokens": 0,
+        }
+
+    def _chunk_buckets(self) -> tuple[int, ...]:
+        """Static chunk lengths for batched prefill.
+
+        Power-of-two lengths up to ``prefill_chunk``, strictly below
+        ``max_seq``.  Sliding-window ring caches are widened by the
+        largest bucket (``_window_slack``), so every cache stays strictly
+        LONGER than any chunk: a chunk of exactly cache length would take
+        _write_cache's full-assign path (erasing older in-window history)
+        and a longer one would scatter duplicate ring slots in a single
+        write — implementation-defined in JAX.  Empty tuple =
+        token-at-a-time prefill — the legacy path, also forced for
+        recurrent-state archs whose recurrence would consume pad tokens.
+        """
+        cap = self.scfg.prefill_chunk
+        if cap <= 1 or RECURRENT_KINDS & set(self.cfg.block_kinds):
+            return ()
+        out, b = [], 2
+        while b <= cap:
+            if b < self.scfg.max_seq:
+                out.append(b)
+            b *= 2
+        if cap not in out and cap < self.scfg.max_seq:
+            out.append(cap)
+        return tuple(sorted(out))
+
+    @property
+    def chunk_buckets(self) -> tuple[int, ...]:
+        """Static prefill chunk lengths in use (empty = token-at-a-time)."""
+        return self._buckets
+
+    def warmup(self) -> None:
+        """Compile every chunk-bucket prefill program plus the decode
+        program outside any measurement window: one LONE request of
+        exactly the bucket length hits that bucket (drained one at a time
+        — co-resident requests would share the largest bucket).  Clears
+        the finished list and stats afterwards; note warmup advances the
+        submission counter, so it shifts later requests' PRNG streams."""
+        for bl in (self._buckets or (1,)):
+            self.submit([2 + (i % 5) for i in range(bl)], max_new=2,
+                        request_id=f"_warmup{bl}")
+            self.run_until_drained()
+        self.finished.clear()
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        self.stats.update(requests=0, prefill_tokens=0, pad_tokens=0,
+                          decode_steps=0, legacy_prefill_tokens=0,
+                          prefill_chunks={}, prefix_len_hist={})
 
     # -- API -------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 32, request_id=None):
         self.queue.append({"prompt": list(prompt), "max_new": max_new,
-                           "id": request_id, "generated": []})
+                           "id": request_id, "generated": [],
+                           "_seq": self._submitted})
+        self._submitted += 1
+        self.stats["requests"] += 1
+        h = self.stats["prefix_len_hist"]
+        bucket = _pow2_bucket(max(len(prompt), 1))
+        h[bucket] = h.get(bucket, 0) + 1
 
     def _admit(self) -> None:
         for lane in range(self.scfg.batch_lanes):
@@ -109,57 +240,136 @@ class ServingEngine:
                 continue
             req = self.queue.pop(0)
             self.states = self._reset_lane(self.states, lane)
-            # per-lane prefill: run the prompt through the decode path one
-            # token at a time sharing the same jitted program (static shapes).
-            # Long prompts use the batched prefill program in examples.
             self.lane_request[lane] = req
             self.lane_active[lane] = True
             self.lane_pos[lane] = 0
             req["_pending_prompt"] = req["prompt"][:]
+            # per-lane PRNG stream, keyed by SUBMISSION id: a request's
+            # samples never depend on lane count or co-resident traffic
+            self.lane_keys = self.lane_keys.at[lane].set(
+                jax.random.fold_in(self.base_key, req["_seq"]))
 
-    def step(self) -> None:
-        """One engine iteration: feed each active lane one token."""
-        self._admit()
-        if not self.lane_active.any():
+    def _finish_lane(self, lane: int) -> None:
+        req = self.lane_request[lane]
+        self.finished.append({"id": req["id"], "prompt": req["prompt"],
+                              "tokens": req["generated"]})
+        self.lane_active[lane] = False
+        self.lane_request[lane] = None
+
+    def _check_done(self, lane: int) -> None:
+        req = self.lane_request[lane]
+        done = (len(req["generated"]) >= req["max_new"]
+                or (req["generated"]
+                    and req["generated"][-1] == self.scfg.eos_token)
+                or self.lane_pos[lane] >= self.scfg.max_seq - 1)
+        if done:
+            self._finish_lane(lane)
+
+    def _step_keys(self):
+        """(B, 2) sampling keys: lane stream folded at the current position
+        — deterministic per (request, position), not per engine iteration."""
+        return jax.vmap(jax.random.fold_in)(
+            self.lane_keys, jnp.asarray(self.lane_pos))
+
+    # -- chunked prefill --------------------------------------------------
+    def _prefill_chunk_step(self, lanes: list[int]) -> None:
+        b = self.scfg.batch_lanes
+        cap = self._buckets[-1]
+        chunk: dict[int, int] = {}
+        for lane in list(lanes):
+            room = self.scfg.max_seq - 1 - int(self.lane_pos[lane])
+            if room <= 0:  # prompt exhausted the sequence budget
+                lanes.remove(lane)
+                self._finish_lane(lane)
+                continue
+            chunk[lane] = min(
+                len(self.lane_request[lane]["_pending_prompt"]), cap, room)
+        if not lanes:
             return
+        need = max(chunk.values())
+        t = next(bk for bk in self._buckets if bk >= need)
+        tok = np.zeros((b, t), np.int32)
+        pos = np.full((b, t), -1, np.int32)   # -1 = pad: cache write dropped
+        last_idx = np.zeros(b, np.int32)
+        mask = np.zeros(b, bool)
+        for lane in lanes:
+            c = chunk[lane]
+            req = self.lane_request[lane]
+            tok[lane, :c] = req["_pending_prompt"][:c]
+            pos[lane, :c] = np.arange(self.lane_pos[lane],
+                                      self.lane_pos[lane] + c)
+            last_idx[lane] = c - 1
+            mask[lane] = True
+        lg, self.states = self._prefill(
+            self.params, jnp.asarray(tok), jnp.asarray(pos), self.states,
+            jnp.asarray(mask), jnp.asarray(last_idx), bool(mask.all()))
+        st = self.stats
+        st["prefill_chunks"][t] = st["prefill_chunks"].get(t, 0) + 1
+        st["prefill_tokens"] += sum(chunk.values())
+        st["pad_tokens"] += t * len(lanes) - sum(chunk.values())
+        # sample the boundary token for lanes that just finished their prompt
+        # (key folded at the LAST prompt position — same as the decode path)
+        pre_pos = self.lane_pos.copy()
+        for lane in lanes:
+            self.lane_pos[lane] = pre_pos[lane] + chunk[lane] - 1
+        nxt = np.asarray(_sample(lg, self.scfg.temperature, self._step_keys()))
+        for lane in lanes:
+            c = chunk[lane]
+            req = self.lane_request[lane]
+            del req["_pending_prompt"][:c]
+            self.lane_pos[lane] = pre_pos[lane] + c
+            if not req["_pending_prompt"]:
+                req["generated"].append(int(nxt[lane]))
+            self._check_done(lane)
+
+    # -- decode (and legacy token-at-a-time prefill) ----------------------
+    def _decode_lanes_step(self, lanes: list[int]) -> None:
         b = self.scfg.batch_lanes
         tok = np.zeros((b, 1), np.int32)
-        pos = np.zeros((b, 1), np.int32)
-        for lane in range(b):
+        pos = np.full((b, 1), -1, np.int32)   # -1 = masked lane, write dropped
+        mask = np.zeros(b, bool)
+        for lane in lanes:
             req = self.lane_request[lane]
-            if req is None:
-                continue
-            if req["_pending_prompt"]:
+            if req["_pending_prompt"]:        # legacy prompt feed
                 tok[lane, 0] = req["_pending_prompt"][0]
             elif req["generated"]:
                 tok[lane, 0] = req["generated"][-1]
             pos[lane, 0] = self.lane_pos[lane]
-        logits, self.states = self._decode(self.params, token=jnp.asarray(tok),
-                                           position=jnp.asarray(pos),
-                                           states=self.states)
-        self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(_sample(logits, self.scfg.temperature, sub))
-        for lane in range(b):
+            mask[lane] = True
+        logits, self.states = self._decode(
+            self.params, jnp.asarray(tok), jnp.asarray(pos), self.states,
+            jnp.asarray(mask), bool(mask.all()))
+        nxt = np.asarray(_sample(logits, self.scfg.temperature,
+                                 self._step_keys()))
+        self.stats["decode_steps"] += 1
+        for lane in lanes:
             req = self.lane_request[lane]
-            if req is None:
-                continue
             self.lane_pos[lane] += 1
             if req["_pending_prompt"]:
                 req["_pending_prompt"].pop(0)
+                self.stats["legacy_prefill_tokens"] += 1
                 if not req["_pending_prompt"]:
                     req["generated"].append(int(nxt[lane]))
             else:
                 req["generated"].append(int(nxt[lane]))
-            done = (len(req["generated"]) >= req["max_new"]
-                    or (req["generated"]
-                        and req["generated"][-1] == self.scfg.eos_token)
-                    or self.lane_pos[lane] >= self.scfg.max_seq - 1)
-            if done:
-                self.finished.append(
-                    {"id": req["id"], "prompt": req["prompt"],
-                     "tokens": req["generated"]})
-                self.lane_active[lane] = False
-                self.lane_request[lane] = None
+            self._check_done(lane)
+
+    def step(self) -> None:
+        """One engine iteration: a prefill chunk for lanes still consuming
+        their prompt, interleaved with one decode for generating lanes."""
+        self._admit()
+        if not self.lane_active.any():
+            return
+        lanes = range(self.scfg.batch_lanes)
+        prefilling = [l for l in lanes if self.lane_active[l]
+                      and self._buckets
+                      and self.lane_request[l]["_pending_prompt"]]
+        if prefilling:
+            self._prefill_chunk_step(prefilling)
+        decoding = [l for l in lanes if self.lane_active[l]
+                    and l not in prefilling]
+        if decoding:
+            self._decode_lanes_step(decoding)
 
     def run_until_drained(self, max_iters: int = 10_000) -> list[dict]:
         it = 0
@@ -167,3 +377,17 @@ class ServingEngine:
             self.step()
             it += 1
         return self.finished
+
+    def stats_summary(self) -> str:
+        st = self.stats
+        chunks = ",".join(f"{k}:{v}" for k, v in
+                          sorted(st["prefill_chunks"].items()))
+        hist = ",".join(f"<={k}:{v}" for k, v in
+                        sorted(st["prefix_len_hist"].items()))
+        pads = st["pad_tokens"]
+        total = st["prefill_tokens"] + pads
+        eff = 100.0 * st["prefill_tokens"] / total if total else 100.0
+        return (f"requests={st['requests']} decode_steps={st['decode_steps']} "
+                f"prefill_tokens={st['prefill_tokens']} "
+                f"(legacy={st['legacy_prefill_tokens']}) "
+                f"chunk_eff={eff:.0f}% chunks[{chunks}] prefix_hist[{hist}]")

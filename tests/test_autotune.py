@@ -62,6 +62,24 @@ class TestTileLegality:
             bk = autotune.decode_blocks(s, 64, 4)
             assert s % bk == 0
 
+    def test_attention_pv_blocks_divide_sequence(self):
+        """The PV-dequant variant's own key family (f32 accumulator +
+        scale-vector streams) still returns sequence-dividing tiles."""
+        for s_q, s_kv in [(64, 64), (512, 512), (100, 100), (2048, 2048)]:
+            bq, bk = autotune.attention_pv_blocks(s_q, s_kv, 64)
+            assert s_q % bq == 0 and s_kv % bk == 0, (s_q, s_kv, bq, bk)
+        from repro.core.costmodel import attention_pv_tile_cost
+        bq, bk = autotune.attention_pv_blocks(512, 512, 64)
+        assert attention_pv_tile_cost(512, 512, 64, bq, bk) < float("inf")
+
+    def test_attention_pv_measured_override(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "measured.json"))
+        autotune.reset_measured_cache()
+        autotune.record("attnpv/512x512x64/int8/pallas", (8, 8), 1.0)
+        autotune.reset_measured_cache()
+        assert autotune.attention_pv_blocks(512, 512, 64) == (8, 8)
+
     def test_rowwise_blocks_sublane_aligned(self):
         for m in (1, 7, 8, 100, 4096):
             bm = autotune.rowwise_blocks(m, 2048)

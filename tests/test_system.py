@@ -152,11 +152,24 @@ class TestCompression:
 
 
 class TestServing:
+    _cfg = None
+    _params = None
+
+    @classmethod
+    def _model(cls):
+        if cls._cfg is None:
+            cls._cfg = get_config("starcoder2-3b", reduced=True)
+            cls._params = init_params(KEY, cls._cfg)
+        return cls._cfg, cls._params
+
+    def _engine(self, **kw):
+        cfg, params = self._model()
+        kw.setdefault("batch_lanes", 2)
+        kw.setdefault("max_seq", 48)
+        return ServingEngine(params, cfg, ServeConfig(**kw))
+
     def test_engine_completes_and_resets_lanes(self):
-        cfg = get_config("starcoder2-3b", reduced=True)
-        params = init_params(KEY, cfg)
-        eng = ServingEngine(params, cfg,
-                            ServeConfig(batch_lanes=2, max_seq=48))
+        eng = self._engine()
         for i in range(5):
             eng.submit([3, 4, 5], max_new=6, request_id=i)
         done = eng.run_until_drained()
@@ -166,15 +179,129 @@ class TestServing:
     def test_greedy_deterministic_across_lanes(self):
         """Same prompt in different lanes -> same greedy output (lane
         isolation: the reset really clears state)."""
-        cfg = get_config("starcoder2-3b", reduced=True)
-        params = init_params(KEY, cfg)
-        eng = ServingEngine(params, cfg,
-                            ServeConfig(batch_lanes=2, max_seq=48))
+        eng = self._engine()
         for i in range(4):
             eng.submit([7, 8, 9, 10], max_new=5, request_id=i)
         done = eng.run_until_drained()
         outs = {tuple(d["tokens"]) for d in done}
         assert len(outs) == 1
+
+    @pytest.mark.parametrize("int8_kv", [False, True])
+    def test_chunked_prefill_matches_oneshot_greedy(self, int8_kv):
+        """Chunked prefill (small buckets), one-shot prefill (chunk covers
+        the whole prompt) and legacy token-at-a-time produce IDENTICAL
+        greedy tokens — chunking is a scheduling change, not a numerical
+        one — including over the int8 KV cache."""
+        prompts = [[7, 8, 9, 10, 11, 12, 13, 14, 15], [3, 4, 5],
+                   [20 + i for i in range(17)], [9, 9, 9, 9, 9]]
+
+        def run(chunk):
+            eng = self._engine(prefill_chunk=chunk, int8_kv=int8_kv)
+            for i, p in enumerate(prompts):
+                eng.submit(p, max_new=5, request_id=i)
+            return {d["id"]: d["tokens"] for d in eng.run_until_drained()}
+
+        legacy, chunked, oneshot = run(0), run(4), run(32)
+        assert legacy == chunked == oneshot
+
+    def test_chunked_prefill_sliding_window_ring_slack(self):
+        """Sliding-window arch, prompt >> window (ring wraps): chunked
+        prefill must equal token-at-a-time.  Guards the window-slack
+        allocation — with ring size == window, a C-token chunk write
+        evicts keys still inside the earliest chunk query's window."""
+        from repro.models.config import ArchConfig
+        cfg = ArchConfig(name="swa-test", family="dense", n_layers=2,
+                         d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab_size=256, d_head=16,
+                         block_pattern=("attn_swa",), sliding_window=32)
+        params = init_params(KEY, cfg)
+        prompt = list(range(2, 72))  # 70 tokens: the 32-slot ring wraps
+
+        def run(chunk):
+            eng = ServingEngine(params, cfg,
+                                ServeConfig(batch_lanes=2, max_seq=128,
+                                            prefill_chunk=chunk))
+            eng.submit(prompt, max_new=5, request_id=0)
+            return eng.run_until_drained()[0]["tokens"]
+
+        assert run(0) == run(16) == run(64)
+
+    def test_chunked_prefill_interleaves_decode(self):
+        """A long prompt admitted while another lane is generating must not
+        stall it: decode steps run between prefill chunks and the early
+        request's output is unchanged."""
+        alone = self._engine(prefill_chunk=4)
+        alone.submit([7, 8, 9], max_new=8, request_id="a")
+        want = alone.run_until_drained()[0]["tokens"]
+
+        eng = self._engine(prefill_chunk=4)
+        eng.submit([7, 8, 9], max_new=8, request_id="a")
+        eng.step()  # lane 0 finishes its prompt, starts generating
+        eng.submit(list(range(20, 44)), max_new=4, request_id="b")
+        done = eng.run_until_drained()
+        by_id = {d["id"]: d["tokens"] for d in done}
+        assert by_id["a"] == want  # co-resident prefill didn't disturb it
+        assert len(by_id["b"]) == 4
+        assert eng.stats["prefill_chunks"]  # chunked path actually ran
+        assert eng.stats["decode_steps"] > 8  # decode interleaved
+
+    def test_lane_reset_isolation_after_reuse(self):
+        """A lane that served a long request then a short one gives the
+        short one the same output as a fresh engine would (no KV leak)."""
+        eng = self._engine(batch_lanes=1, prefill_chunk=4)
+        eng.submit(list(range(30, 40)), max_new=6, request_id="long")
+        eng.submit([5, 6, 7], max_new=6, request_id="short")
+        reused = {d["id"]: d["tokens"] for d in eng.run_until_drained()}
+        fresh = self._engine(batch_lanes=1, prefill_chunk=4)
+        fresh.submit([5, 6, 7], max_new=6, request_id="short")
+        assert reused["short"] == fresh.run_until_drained()[0]["tokens"]
+
+    def test_eos_terminates_generation(self):
+        """eos_token set to the model's first greedy token -> exactly one
+        generated token, lane freed for the next request."""
+        probe = self._engine()
+        probe.submit([7, 8, 9, 10], max_new=1)
+        first = probe.run_until_drained()[0]["tokens"][0]
+        eng = self._engine(eos_token=first, prefill_chunk=4)
+        for i in range(3):
+            eng.submit([7, 8, 9, 10], max_new=32, request_id=i)
+        done = eng.run_until_drained()
+        assert len(done) == 3
+        assert all(d["tokens"] == [first] for d in done)
+
+    def test_max_new_exact(self):
+        for chunk in (0, 4):
+            eng = self._engine(prefill_chunk=chunk, eos_token=-1)
+            eng.submit([3, 4, 5, 6], max_new=7)
+            assert len(eng.run_until_drained()[0]["tokens"]) == 7
+
+    def test_max_seq_truncates(self):
+        """max_seq bounds the lane: generation stops at the sequence budget
+        and a prompt that exhausts it still drains (no infinite loop)."""
+        eng = self._engine(max_seq=16, prefill_chunk=4, eos_token=-1)
+        eng.submit([3] * 10, max_new=100, request_id="gen")
+        eng.submit([4] * 30, max_new=100, request_id="longprompt")
+        done = eng.run_until_drained(max_iters=500)
+        by_id = {d["id"]: d["tokens"] for d in done}
+        assert len(by_id) == 2
+        assert 1 <= len(by_id["gen"]) <= 16 - 10
+        assert len(by_id["longprompt"]) == 0  # prompt ate the whole budget
+
+    def test_per_lane_prng_decorrelated_and_lane_count_invariant(self):
+        """temperature>0: identical prompts in different requests sample
+        DIFFERENT streams, and a request's tokens don't depend on lane
+        count or co-resident traffic (keys fold request id + position)."""
+        def run(lanes, n):
+            eng = self._engine(batch_lanes=lanes, temperature=0.9,
+                               prefill_chunk=4, seed=3)
+            for i in range(n):
+                eng.submit([5, 6, 7, 8], max_new=6, request_id=i)
+            return {d["id"]: d["tokens"] for d in eng.run_until_drained()}
+
+        two = run(2, 4)
+        four = run(4, 4)
+        assert two == four                      # lane-count invariant
+        assert len({tuple(v) for v in two.values()}) > 1  # decorrelated
 
 
 class TestShardingRules:
