@@ -1,7 +1,7 @@
 """End-to-end benches on reduced configs: train step + decode throughput,
 bf16 vs w8a8 (paper technique), serving-engine mixed prefill+decode traffic
-(chunked vs token-at-a-time prefill), plus the roofline summary from the
-dry-run artifacts when present."""
+(packed token-budget vs chunked vs token-at-a-time scheduling), plus the
+roofline summary from the dry-run artifacts when present."""
 from __future__ import annotations
 
 import glob
@@ -82,27 +82,55 @@ def _serve_traffic(engine, n_requests: int, vocab: int) -> None:
         engine.submit(prompt, max_new=8, request_id=i)
 
 
-def _serve_bench(arch: str, precision: str, chunk: int,
+_SERVE_MODES = {
+    # mode -> (token_budget, prefill_chunk).  The packed budget matches
+    # chunked's per-iteration prompt capacity (4 lanes x chunk 16), so the
+    # comparison isolates the SCHEDULE: one packed forward vs the
+    # prefill-then-decode call pair.
+    "packed": (64, 0),      # ONE forward mixes prefill chunks + decode
+    "chunked": (0, 16),     # PR 2 two-call schedule (prefill, then decode)
+    "tokenwise": (0, 0),    # token-at-a-time baseline
+}
+
+
+def _serve_bench(arch: str, precision: str, mode: str,
                  n_requests: int = 6) -> tuple:
-    """tokens/sec for the serving engine on mixed traffic.  ``chunk=0`` is
-    the token-at-a-time baseline the chunked prefill must beat."""
+    """tokens/sec for the serving engine on mixed traffic.  ``packed``
+    must beat ``chunked``, which must beat ``tokenwise``."""
     cfg = get_config(arch, precision=precision, reduced=True)
     params = _serve_params(arch, precision)
+    budget, chunk = _SERVE_MODES[mode]
     scfg = ServeConfig(batch_lanes=4, max_seq=128,
                        int8_kv=(precision == "w8a8"),
-                       prefill_chunk=chunk, temperature=0.0)
-    # measure on a warmed engine (jit caches live on the engine closures)
+                       token_budget=budget, prefill_chunk=chunk,
+                       temperature=0.0)
+    # measure the warmed steady state, best of 3 drains: the rehearsal
+    # (round 0, untimed) drains the IDENTICAL traffic — greedy scheduler =>
+    # identical step sequence — warming every program variant plus the
+    # host-side dispatch caches (engine.warmup() also covers all
+    # (bucket, commit_all) variants now, but the rehearsal costs the same
+    # and warms the sampling path too).  Best-of damps scheduler jitter
+    # on a ~50-token drain.
     engine = ServingEngine(params, cfg, scfg)
-    engine.warmup()
-    _serve_traffic(engine, n_requests, cfg.vocab_size)
-    t0 = time.time()
-    done = engine.run_until_drained()
-    dt = time.time() - t0
-    toks = sum(len(d["tokens"]) for d in done)
-    mode = "chunked" if chunk else "tokenwise"
+    dt, toks = float("inf"), 1
+    for rnd in range(4):
+        _serve_traffic(engine, n_requests, cfg.vocab_size)
+        engine.reset_stats()
+        t0 = time.time()
+        done = engine.run_until_drained()
+        d = time.time() - t0
+        n = sum(len(r["tokens"]) for r in done)
+        engine.finished.clear()
+        st = engine.stats
+        if rnd and d / max(n, 1) < dt / toks:
+            dt, toks = d, n
+    valid = st["prompt_tokens"] + st["decode_tokens"]
+    fill = 100.0 * valid / st["budget_tokens"] if st["budget_tokens"] else 0.0
+    share = 100.0 * st["decode_tokens"] / valid if valid else 0.0
     return (f"e2e/serve_mixed_{arch}-reduced_{precision}_{mode}",
             dt / max(toks, 1) * 1e6,
-            f"tok_s={toks/dt:.1f};requests={n_requests};chunk={chunk}")
+            f"tok_s={toks/dt:.1f};requests={n_requests};steps={st['steps']};"
+            f"decode_share={share:.0f}%;budget_fill={fill:.0f}%")
 
 
 def run(smoke: bool = False) -> list[tuple]:
@@ -111,10 +139,12 @@ def run(smoke: bool = False) -> list[tuple]:
         _train_bench("codeqwen1.5-7b", reps=reps),
         _decode_bench("codeqwen1.5-7b", "bf16", reps=reps),
         _decode_bench("codeqwen1.5-7b", "w8a8", reps=reps),
-        _serve_bench("codeqwen1.5-7b", "bf16", chunk=0),
-        _serve_bench("codeqwen1.5-7b", "bf16", chunk=16),
-        _serve_bench("codeqwen1.5-7b", "w8a8", chunk=0),
-        _serve_bench("codeqwen1.5-7b", "w8a8", chunk=16),
+        _serve_bench("codeqwen1.5-7b", "bf16", "tokenwise"),
+        _serve_bench("codeqwen1.5-7b", "bf16", "chunked"),
+        _serve_bench("codeqwen1.5-7b", "bf16", "packed"),
+        _serve_bench("codeqwen1.5-7b", "w8a8", "tokenwise"),
+        _serve_bench("codeqwen1.5-7b", "w8a8", "chunked"),
+        _serve_bench("codeqwen1.5-7b", "w8a8", "packed"),
     ]
     if not smoke:
         rows.insert(1, _train_bench("mixtral-8x7b"))

@@ -29,7 +29,7 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _write_json(path: str, rows: list[tuple], meta: dict,
-                smoke: bool) -> None:
+                smoke: bool, backend: str | None = None) -> None:
     entries = {name: {"us": round(us, 1), "work": derived}
                for name, us, derived in rows}
     full = os.path.join(REPO_ROOT, path)
@@ -45,6 +45,25 @@ def _write_json(path: str, rows: list[tuple], meta: dict,
         # have never been measured, never overwrites a full run's numbers
         entries = {**entries, **prev}
     else:
+        # schema stability: a FULL run must re-measure every key the
+        # trajectory already has (else the merge below would silently
+        # resurrect a stale value for a renamed/dropped bench forever).
+        # Exempt: roofline/* rows (exist only when dry-run artifacts are
+        # present on this checkout) and, when ``backend`` is given,
+        # backend-suffixed keys from OTHER backends — a pallas run cannot
+        # and must not re-measure the /jnp key family.
+        def exempt(k: str) -> bool:
+            if k.startswith("roofline/"):
+                return True
+            suffix = k.rsplit("/", 1)[-1]
+            return (backend is not None and suffix in ("jnp", "pallas")
+                    and suffix != backend)
+
+        missing = sorted(k for k in set(prev) - set(entries)
+                         if not exempt(k))
+        if missing:
+            raise SystemExit(
+                f"BENCH schema regression: {path} lost keys {missing}")
         entries = {**prev, **entries}
     with open(full, "w") as f:
         json.dump(dict(meta, entries=entries), f, indent=1, sort_keys=True)
@@ -75,7 +94,8 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
 
     meta = {"schema": 1, "seed": kernel_bench.SEED}
-    _write_json("BENCH_kernels.json", kernel_rows, meta, smoke=args.smoke)
+    _write_json("BENCH_kernels.json", kernel_rows, meta, smoke=args.smoke,
+                backend=args.backend)
     _write_json("BENCH_e2e.json", e2e_rows, meta, smoke=args.smoke)
 
 

@@ -1,0 +1,45 @@
+"""CI gate: the BENCH_*.json artifacts must never LOSE a key relative to
+the committed baseline (HEAD).  benchmarks/run.py refuses to drop keys on
+full runs (backend-scoped), but the CI path only runs ``--smoke`` whose
+merge semantics cannot lose keys by construction — this check closes the
+loop end to end: whatever the working tree did to the artifacts, every key
+the committed trajectory tracks must still be present.
+
+Usage: python scripts/check_bench_schema.py
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ok = True
+    for name in ("BENCH_kernels.json", "BENCH_e2e.json"):
+        try:
+            out = subprocess.run(
+                ["git", "show", f"HEAD:{name}"], capture_output=True,
+                text=True, check=True, cwd=REPO).stdout
+            prev = json.loads(out).get("entries", {})
+        except (subprocess.CalledProcessError, ValueError):
+            print(f"  {name}: no committed baseline, skipping")
+            continue
+        with open(os.path.join(REPO, name)) as f:
+            cur = json.load(f).get("entries", {})
+        missing = sorted(set(prev) - set(cur))
+        if missing:
+            print(f"FAIL: {name} lost keys vs HEAD: {missing}",
+                  file=sys.stderr)
+            ok = False
+        else:
+            print(f"  {name}: {len(cur)} keys, superset of HEAD's "
+                  f"{len(prev)}")
+    if not ok:
+        raise SystemExit(1)
+    print("BENCH schema stable vs HEAD")
+
+
+if __name__ == "__main__":
+    main()

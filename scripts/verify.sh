@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verification: full test suite + a ~30 s benchmark smoke that must
-# leave machine-readable perf artifacts at the repo root, an examples
-# smoke (quickstart + a 4-request serving drain), and a doc link check.
+# leave machine-readable perf artifacts at the repo root (run.py fails if
+# BENCH_*.json would lose a previously present key), an examples smoke
+# (quickstart + a 4-request packed serving drain), a packed-vs-chunked-vs-
+# tokenwise greedy-equivalence smoke, and a doc link check.
 #
 # Usage: scripts/verify.sh
 set -euo pipefail
@@ -20,12 +22,18 @@ for f in BENCH_kernels.json BENCH_e2e.json; do
     fi
 done
 
+echo "== BENCH schema stability (no key lost vs HEAD) =="
+python scripts/check_bench_schema.py
+
 echo "== examples/quickstart smoke =="
 PYTHONPATH=src python examples/quickstart.py
 
-echo "== serving drain smoke (chunked prefill, 4 requests) =="
+echo "== serving drain smoke (packed step, 4 requests) =="
 PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --reduced \
-    --requests 4 --max-new 4 --lanes 2 --max-seq 64 --prefill-chunk 8
+    --requests 4 --max-new 4 --lanes 2 --max-seq 64 --token-budget 8
+
+echo "== packed/chunked/tokenwise greedy-equivalence smoke =="
+PYTHONPATH=src python scripts/greedy_equiv_smoke.py
 
 echo "== doc link check =="
 python scripts/check_doc_links.py

@@ -174,6 +174,31 @@ def attention_pv_tile_cost(s_q: int, s_kv: int, d: int, bq: int,
     return max(compute, hbm) + 3 * steps * TPU_GRID_STEP_CYCLES
 
 
+def packed_attention_tile_cost(t_bucket: int, s_kv: int, d: int, bq: int,
+                               bk: int, in_bytes: int = 2) -> float:
+    """Estimated cycles for one (batch*head) slice of the packed serving
+    attention: a ``t_bucket``-row query block (mixed prefill depths and
+    single-token decode rows in one batch) against an ``s_kv``-slot cache.
+
+    Unlike the pure-prefill table (square S x S, causal-aligned) and the
+    pure-decode table (1 query row), the packed shape is a SHORT, ragged
+    query block against a LONG cache: masks derive from per-slot absolute
+    positions, so the (bk,) int32 position vector streams alongside every
+    K tile, and no causal-block skipping applies (pad rows still pay)."""
+    gq, gk = _cdiv(t_bucket, bq), _cdiv(s_kv, bk)
+    vmem = ((bq * d + 2 * bk * d) * in_bytes   # q tile + double-buffered k/v
+            + bk * 4                           # per-slot position vector
+            + bq * (bk + 2 * d + 2) * 4)       # scores + acc + m/l columns
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    steps = gq * gk
+    compute = steps * 2 * (bq * bk * d) / TPU_MACS_PER_CYCLE
+    hbm = (gq * (bq * d * in_bytes
+                 + gk * (2 * bk * d * in_bytes + bk * 4))
+           ) / TPU_HBM_BYTES_PER_CYCLE
+    return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES
+
+
 def rowwise_tile_cost(m: int, n: int, bm: int,
                       in_bytes: int = 4, out_bytes: int = 1) -> float:
     """Estimated cycles for a row-blocked elementwise/reduction kernel

@@ -138,8 +138,12 @@ def shard_hint(x: jax.Array, *logical) -> jax.Array:
 # split: partial sums all-reduce), the output dim carries fsdp storage.
 _ROW_PARALLEL = {"wo", "w_out"}
 # leaves that must stay replicated regardless of divisibility (norm/gate
-# vectors: sharding them buys nothing and adds collectives)
-_REPLICATED = {"scale", "bias", "gate_attn", "gate_mlp", "shared_gate"}
+# vectors: sharding them buys nothing and adds collectives; slstm's
+# block-diagonal per-head recurrent weights r_w sit INSIDE a per-timestep
+# lax.scan — sharding them puts collectives in a 4096-trip loop body,
+# the xlstm-350m train_4k 14 TiB/device blowup)
+_REPLICATED = {"scale", "bias", "gate_attn", "gate_mlp", "shared_gate",
+               "r_w"}
 
 
 def _spec_for_path(path: str, shape: tuple) -> P:

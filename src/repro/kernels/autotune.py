@@ -79,6 +79,7 @@ def reset_measured_cache() -> None:
     gemm_blocks.cache_clear()
     attention_blocks.cache_clear()
     attention_pv_blocks.cache_clear()
+    packed_blocks.cache_clear()
     decode_blocks.cache_clear()
     rowwise_blocks.cache_clear()
 
@@ -191,6 +192,31 @@ def attention_pv_blocks(s_q: int, s_kv: int, d: int,
     for bq in q_tiles:
         for bk in k_tiles:
             c = costmodel.attention_pv_tile_cost(s_q, s_kv, d, bq, bk)
+            if c < best_cost:
+                best, best_cost = (bq, bk), c
+    if best is None:  # every candidate blew VMEM: take the smallest tiles
+        best = (q_tiles[0], k_tiles[0])
+    return best
+
+
+@functools.lru_cache(maxsize=4096)
+def packed_blocks(t_bucket: int, s_kv: int, d: int, arch: str = "",
+                  backend: str = "pallas") -> tuple[int, int]:
+    """(bq, bk) for the packed serving forward's cache-backed attention:
+    a ``t_bucket``-row batch mixing prefill chunk tokens and decode tokens
+    against an ``s_kv``-slot cache.  Its own key family — keyed on
+    (budget bucket, arch) — because neither the pure-prefill table (square
+    causal S x S) nor the pure-decode table (single query row) models a
+    short ragged query block against a long position-masked cache."""
+    hit = _hit(f"packed/{t_bucket}x{s_kv}x{d}/{arch}/{backend}")
+    if hit:
+        return hit
+    best, best_cost = None, float("inf")
+    q_tiles, k_tiles = _divisor_tiles(t_bucket), _divisor_tiles(s_kv)
+    for bq in q_tiles:
+        for bk in k_tiles:
+            c = costmodel.packed_attention_tile_cost(t_bucket, s_kv, d,
+                                                     bq, bk)
             if c < best_cost:
                 best, best_cost = (bq, bk), c
     if best is None:  # every candidate blew VMEM: take the smallest tiles

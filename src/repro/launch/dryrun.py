@@ -98,6 +98,84 @@ def _serve_step(cfg: ArchConfig, kind: str, params, tokens, positions, states,
 
 
 # ---------------------------------------------------------------------------
+# multi-stage pipeline dry run
+# ---------------------------------------------------------------------------
+
+def run_pipeline_cell(n_stages: int = 4, n_microbatches: int = 8,
+                      n_layers: int = 8, d_model: int = 512,
+                      microbatch: int = 4, save: bool = True) -> dict:
+    """Compile the GPipe schedule on a REAL multi-stage placeholder mesh.
+
+    ``dist.pipeline.pipeline_apply`` was previously only exercised on one
+    stage (tests/test_pipeline.py), where the ppermute rotation and the
+    last-stage psum-broadcast are degenerate.  This cell runs it under
+    ``shard_map`` over an ``n_stages``-way "stage" axis: each stage owns a
+    contiguous layer slab (the stage axis shards the stacked layer dim —
+    the shard_map form of ``split_stages``), activations rotate via
+    collective-permute every schedule step, and the compiled HLO must show
+    the M + S - 1 step structure.
+    """
+    assert n_stages >= 2, "the point is a MULTI-stage schedule"
+    assert n_layers % n_stages == 0, (n_layers, n_stages)
+    from jax.sharding import PartitionSpec as P
+
+    from ..dist.pipeline import (
+        bubble_fraction,
+        pipeline_apply,
+        shard_map_compat,
+    )
+
+    mesh = jax.make_mesh((n_stages,), ("stage",))
+
+    def layer_fn(w, h):
+        return jnp.tanh(h @ w)
+
+    def run(stage_params, xs):
+        return pipeline_apply(layer_fn, stage_params, xs, axis_name="stage")
+
+    fn = jax.jit(shard_map_compat(
+        run, mesh, in_specs=(P("stage"), P()), out_specs=P()))
+    layers_abs = jax.ShapeDtypeStruct((n_layers, d_model, d_model),
+                                      jnp.float32)
+    xs_abs = jax.ShapeDtypeStruct((n_microbatches, microbatch, d_model),
+                                  jnp.float32)
+    t0 = time.time()
+    with mesh:
+        lowered = fn.lower(layers_abs, xs_abs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    hlo = hlo_analysis.analyze(compiled.as_text())
+    n_steps = n_microbatches + n_stages - 1
+    record = {
+        "kind": "pipeline", "n_stages": n_stages,
+        "n_microbatches": n_microbatches, "n_layers": n_layers,
+        "d_model": d_model, "microbatch": microbatch,
+        "schedule_steps": n_steps,
+        "bubble_fraction": round(bubble_fraction(n_stages, n_microbatches), 4),
+        "hlo": {
+            "flops_per_device": hlo.flops,
+            "collective_bytes_per_device": hlo.coll_bytes,
+            "collective_counts": {k: float(v)
+                                  for k, v in hlo.coll_counts.items()},
+        },
+        "timing": {"lower_s": round(t_lower, 2),
+                   "compile_s": round(t_compile, 2)},
+    }
+    # the schedule's signature: one activation rotation per step (ppermute
+    # may lower as -start/-done pairs or be trip-counted inside the while)
+    assert record["hlo"]["collective_counts"].get("collective-permute", 0) \
+        >= n_steps, record["hlo"]["collective_counts"]
+    if save:
+        sub = os.path.join(RESULTS_DIR, "pipeline")
+        os.makedirs(sub, exist_ok=True)
+        name = f"stage{n_stages}__mb{n_microbatches}.json"
+        with open(os.path.join(sub, name), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+# ---------------------------------------------------------------------------
 # single-cell dry run
 # ---------------------------------------------------------------------------
 
@@ -222,7 +300,28 @@ def main() -> None:
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--single-pod-only", action="store_true")
     ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="compile the multi-stage GPipe schedule cells "
+                         "(2 and 4 stages) instead of the model cells")
     args = ap.parse_args()
+
+    if args.pipeline:
+        n_fail = 0
+        for n_stages, n_mb in ((2, 4), (4, 8)):
+            tag = f"[pipeline] {n_stages} stages x {n_mb} microbatches"
+            try:
+                rec = run_pipeline_cell(n_stages=n_stages,
+                                        n_microbatches=n_mb)
+                cc = rec["hlo"]["collective_counts"]
+                print(f"OK   {tag}: {rec['schedule_steps']} steps, "
+                      f"bubble {rec['bubble_fraction']:.2f}, "
+                      f"permutes {cc.get('collective-permute', 0):.0f}, "
+                      f"compile {rec['timing']['compile_s']}s", flush=True)
+            except Exception as e:
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+                n_fail += 1
+        raise SystemExit(1 if n_fail else 0)
 
     archs = [args.arch] if args.arch else ARCH_IDS
     meshes = [False, True]

@@ -1,9 +1,9 @@
-"""Serving launcher: chunked prefill + batched decode with the
-continuous-batching engine.
+"""Serving launcher: packed token-budget forward with the
+continuous-batching engine (chunked / tokenwise schedules as fallbacks).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
-      --requests 16 --max-new 32 --int8-kv --prefill-chunk 16
+      --requests 16 --max-new 32 --int8-kv --token-budget 32
 """
 from __future__ import annotations
 
@@ -32,8 +32,11 @@ def main() -> None:
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--w8a8", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--token-budget", type=int, default=32,
+                    help="per-iteration packed-step token budget "
+                         "(0 = disable packing; see --prefill-chunk)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
-                    help="max tokens per batched prefill chunk "
+                    help="chunked-mode cap when --token-budget is 0 "
                          "(0 = legacy token-at-a-time prompt feed)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -53,6 +56,7 @@ def main() -> None:
         params, cfg,
         ServeConfig(batch_lanes=args.lanes, max_seq=args.max_seq,
                     int8_kv=args.int8_kv, temperature=args.temperature,
+                    token_budget=args.token_budget,
                     prefill_chunk=args.prefill_chunk, seed=args.seed),
         kv_source=kv_source)
 
@@ -67,7 +71,7 @@ def main() -> None:
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s, "
           f"int8_kv={args.int8_kv}, precision={precision}, "
-          f"chunk_buckets={engine.chunk_buckets})")
+          f"mode={engine.mode}, buckets={engine.chunk_buckets})")
     print(engine.stats_summary())
 
 

@@ -73,8 +73,14 @@ def make_cell_plan(cfg: ArchConfig, mesh, kind: str, global_batch: int,
         ep=("model",) if ep_mode else (),
         # sequence parallelism: shard the residual stream's seq dim on the
         # model axis between TP regions (Megatron-SP) for train/prefill —
-        # bounds the scan-carried activations and the saved TP outputs
-        sp=("model",) if kind in ("train", "prefill") else (),
+        # bounds the scan-carried activations and the saved TP outputs.
+        # NOT for recurrent-state archs: their per-timestep lax.scan slices
+        # the TIME dim every trip, and a seq-sharded residual stream makes
+        # GSPMD rotate/gather it per timestep — 4096 trips x ~560 MiB of
+        # in-loop collectives = the 14 TiB/device blowup measured on
+        # xlstm-350m train_4k (see ROADMAP audit note)
+        sp=("model",) if kind in ("train", "prefill")
+        and not cfg.has_recurrent_state else (),
         active=True,
         sizes=tuple((name, mesh.shape[name]) for name in mesh.shape),
     )

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import shard_hint
-from ..kernels import ops
+from ..kernels import autotune, ops
 from .config import ArchConfig
 from .layers import ExecMode, apply_linear, apply_rope, dense_init
 
@@ -320,8 +320,14 @@ def attention(
         else:
             kc, vc = _read_cache(cache, dtype)              # (B,S,Hkv,D)
             kpos = cache["pos_ids"]                         # (B,S)
+            # mixed-depth packed rows (prefill chunks + decode tokens in
+            # one batch): query-block size from the packed autotune family
+            # keyed on (budget bucket, arch) — neither the pure-prefill nor
+            # the pure-decode table models this shape
+            bq, _ = autotune.packed_blocks(t, kc.shape[1], hd, arch=cfg.name,
+                                           backend=ops.backend())
             out = _sdpa(q, kc, vc, positions, kpos, scale, dtype, causal=True,
-                        window=window, valid=kpos >= 0)
+                        window=window, valid=kpos >= 0, chunk=max(bq, 1))
     else:
         # training / no-cache prefill
         if mode.integer and window == 0:

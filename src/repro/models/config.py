@@ -81,6 +81,14 @@ class ArchConfig:
         return self.n_layers // self.period
 
     @property
+    def has_recurrent_state(self) -> bool:
+        """True if any block carries a per-timestep recurrence (Mamba/
+        xLSTM): such blocks consume every fed token in order, so serving
+        pad tokens would corrupt state and sequence-parallel sharding
+        would collective-shuffle the time dim on every scan trip."""
+        return bool({"mamba2", "mlstm", "slstm"} & set(self.block_kinds))
+
+    @property
     def supports_long_context(self) -> bool:
         """True if decode memory is O(1) or window-bounded (sub-quadratic)."""
         kinds = set(self.block_kinds)

@@ -334,6 +334,13 @@ def slstm(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode,
     nh = cfg.n_heads
     hd = d // nh
     zi = apply_linear(x, params["w_in"], mode).astype(F32)  # (B,T,4d)
+    # the recurrence is DATA-PARALLEL: gather the TP-sharded gate dim ONCE
+    # before the scan and keep the 4096-trip body collective-free —
+    # per-trip sharded ops here made GSPMD rotate/gather state and grads
+    # every timestep (measured 14 TiB/device of in-loop collectives on
+    # xlstm-350m train_4k; r_w is replicated by the param rules for the
+    # same reason: 4 block-diagonal heads cannot shard a 16-way axis)
+    zi = shard_hint(zi, "dp", None, None)
 
     if state is None:
         h0 = jnp.zeros((b, nh, hd), F32)
@@ -354,6 +361,13 @@ def slstm(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode,
         c_new = f_w * c + i_w * jnp.tanh(z_r)
         n_new = f_w * n + i_w
         h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+        # NOTE: shard_hint anchors on the carry/outputs here REGRESS (GSPMD
+        # inserts gathers to satisfy them, then reshards anyway: +0.6M
+        # all-gathers measured).  The residual ~12 small (64 KiB)
+        # collective-permutes per timestep come from the loop-carry layout
+        # solver sharding the (B,H,hd) state over the model axis; their
+        # bytes are negligible next to the fixed 14 TiB blowup (ROADMAP
+        # audit note).
         return (h_new, c_new, n_new, m_new), h_new
 
     (h, c, n, m), ys = jax.lax.scan(step, (h0, c0, n0, m0),

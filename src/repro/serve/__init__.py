@@ -1,2 +1,8 @@
-"""Serving substrate: prefill/decode engine with batched request scheduling."""
-from .engine import ServeConfig, ServingEngine, prefill_step, decode_step  # noqa: F401
+"""Serving substrate: packed token-budget engine with batched request scheduling."""
+from .engine import (  # noqa: F401
+    ServeConfig,
+    ServingEngine,
+    decode_step,
+    packed_step,
+    prefill_step,
+)

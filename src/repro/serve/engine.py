@@ -1,38 +1,61 @@
-"""Serving engine: jitted prefill/decode steps + continuous batching.
+"""Serving engine: ONE packed token-budget forward + continuous batching.
 
-``prefill_step`` / ``decode_step`` are the two programs the dry-run lowers
-for the decode_* shape cells: decode is one new token against a seq_len KV
-cache.  The engine adds host-side continuous batching: a slot-based scheduler
-that admits queued requests into free batch lanes each iteration (requests
+``packed_step`` is the single jitted program family the engine dispatches:
+every iteration builds one ``(B, T_bucket)`` batch in which each active
+lane contributes a contiguous span of tokens — generating lanes 1 token,
+prefilling lanes up to their share of the per-iteration ``token_budget`` —
+right-padded with position -1 tokens whose KV-cache writes are dropped
+(models/attention._write_cache).  Prefill chunks and decode tokens share
+the same forward, the same cache writes, and the same lane-masked state
+commit (Sarathi-style token packing): decode lanes no longer idle while a
+co-resident prompt prefills, and ONE program family — a compile per
+(static budget bucket, commit_all) pair — replaces the separate
+prefill/decode programs and their dual compile caches.
+
+Mixed per-lane depths are handled in one call: each lane's next-token
+logits are gathered at its own last VALID row index, and each lane's
+sampling key is folded at its own last fed position, so a request's tokens
+are a pure function of (seed, submission id, position) — never of lane
+count, co-resident traffic, or scheduling mode.
+
+The engine adds host-side continuous batching: a slot-based scheduler
+admits queued requests into free batch lanes each iteration (requests
 carry their own position counters, so lanes mix sequences at different
-depths — the vLLM-style pattern restricted to static shapes).
+depths — the vLLM-style pattern restricted to static shapes).  Bucket
+lengths are a small power-of-two set (one compile per bucket, never per
+prompt length); sliding-window ring caches are widened by the largest
+bucket (init_states ``window_slack``) so a chunk write never evicts
+in-window keys.
 
-Prefill is CHUNKED and BATCHED: admitted prompts run through the jitted
-prefill program in fixed-size chunks, padded up to a small static set of
-bucket lengths (one compile per bucket, never per prompt length), and
-interleaved with decode iterations so lanes that are already generating
-keep generating while new prompts stream in.  Pad tokens carry position -1:
-the KV cache drops their writes (models/attention._write_cache) and their
-logits are never read.  State updates are lane-masked — a forward pass only
-commits the lanes that actually participated, so concurrent prefill/decode
-lanes never corrupt each other.  ``prefill_chunk=0`` restores the legacy
-token-at-a-time prompt feed (also the fallback for recurrent-state archs,
-where pad tokens would advance the recurrence).
+Fallback schedules over the SAME program family:
+
+* ``token_budget=0, prefill_chunk>0`` — chunked mode: prefill chunks and
+  decode tokens run as two calls per iteration (the pre-packing PR 2
+  scheduler, kept for A/B benching).
+* both 0 — tokenwise: every lane feeds one token per call, prompts
+  token-at-a-time.  Forced for recurrent-state archs (Mamba/xLSTM), whose
+  recurrence would consume pad tokens.
+
+Greedy outputs are bit-identical across packed / chunked / tokenwise —
+packing is a scheduling change, not a numerical one (enforced by
+tests/test_system.py and the scripts/verify.sh equivalence smoke).
 
 Sampling uses PER-LANE PRNG streams keyed by request submission id and
-position — lane count, admission order, and co-resident traffic never
-change a request's sampled tokens.
+position.  ``warmup()`` requests live in a RESERVED key space (folded at
+the top of the uint32 range, ``2^32 - 1 - bucket``) and do not advance the
+submission counter, so warming an engine never shifts later requests'
+sampled tokens.
 
 In w8a8 mode the KV cache is int8 with per-(token, head) scales.  On the
-pallas backend the decode hot path dequantizes EXACTLY inside the fused
-int8-KV kernel's PV accumulation; chunked prefill reads the cache through
-the XLA dequant-then-attend path (same numerics contract — masking and
+pallas backend the all-lanes-decoding steady state (bucket 1) still hits
+the fused int8-KV decode kernel; mixed-depth buckets read the cache
+through the XLA dequant-then-attend path with block sizes from the
+``packed`` autotune key family (same numerics contract — masking and
 scales from the cache, no approximation; see docs/serving.md).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -40,8 +63,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import ArchConfig, forward, init_states, precompute_cross_states
-
-RECURRENT_KINDS = {"mamba2", "mlstm", "slstm"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,24 +72,36 @@ class ServeConfig:
     int8_kv: bool = False
     temperature: float = 0.0     # 0 = greedy
     eos_token: int = 1
-    prefill_chunk: int = 32      # max tokens per prefill chunk; 0 = legacy
+    token_budget: int = 32       # packed-step tokens per iteration; 0 = off
+    prefill_chunk: int = 32      # chunked-mode cap (used when budget = 0)
     seed: int = 0                # base of the per-lane PRNG tree
+
+
+def packed_step(params, cfg: ArchConfig, tokens, positions, states,
+                last_idx=None, kv_source=None):
+    """The unified forward: (B, T) rows where each lane carries 1..T valid
+    tokens (pads at position -1).  Returns each lane's logits at its last
+    valid row (``last_idx`` (B,) int32; default: the final row) + states."""
+    logits, states = forward(params, cfg, tokens, positions=positions,
+                             states=states, kv_source=kv_source)
+    if last_idx is None:
+        return logits[:, -1], states
+    lg = jnp.take_along_axis(logits, last_idx[:, None, None], axis=1)[:, 0]
+    return lg, states
 
 
 def prefill_step(params, cfg: ArchConfig, tokens, positions, states,
                  kv_source=None):
-    """Process a prompt chunk; returns (last-token logits, states)."""
-    logits, states = forward(params, cfg, tokens, positions=positions,
-                             states=states, kv_source=kv_source)
-    return logits[:, -1], states
+    """Full-row prompt processing: packed_step with every row valid."""
+    return packed_step(params, cfg, tokens, positions, states,
+                       kv_source=kv_source)
 
 
 def decode_step(params, cfg: ArchConfig, token, position, states,
                 kv_source=None):
-    """One token for every lane.  token (B,1), position (B,1)."""
-    logits, states = forward(params, cfg, token, positions=position,
-                             states=states, kv_source=kv_source)
-    return logits[:, -1], states
+    """One token for every lane: packed_step at bucket 1."""
+    return packed_step(params, cfg, token, position, states,
+                       kv_source=kv_source)
 
 
 def _masked_commit(old_states, new_states, lane_mask):
@@ -101,7 +134,7 @@ def _pow2_bucket(n: int) -> int:
 
 
 class ServingEngine:
-    """Slot-based continuous batching over the jitted steps."""
+    """Slot-based continuous batching over the packed-step program family."""
 
     def __init__(self, params, cfg: ArchConfig, serve_cfg: ServeConfig,
                  kv_source=None):
@@ -110,40 +143,36 @@ class ServingEngine:
         self.scfg = serve_cfg
         self.kv_source = kv_source
         b = serve_cfg.batch_lanes
-        self._buckets = self._chunk_buckets()
-        # sliding-window ring caches get max-chunk slack slots: a C-token
-        # chunk write must not evict keys still inside the window of the
-        # chunk's earliest query (ring size W serves only C == 1)
+        self._mode = self._resolve_mode()
+        self._buckets = self._token_buckets()
+        if self._mode != "tokenwise" and not self._buckets:
+            # no bucket fits below max_seq (e.g. max_seq=2): every span
+            # would take the cache writer's full-assign path — serve
+            # token-at-a-time instead of crashing on an empty bucket table
+            self._mode = "tokenwise"
+        # sliding-window ring caches get max-bucket slack slots: a C-token
+        # span write must not evict keys still inside the window of the
+        # span's earliest query (ring size W serves only C == 1)
         self._window_slack = self._buckets[-1] if self._buckets else 0
         self.states = init_states(cfg, b, serve_cfg.max_seq,
                                   int8_kv=serve_cfg.int8_kv,
                                   window_slack=self._window_slack)
 
-        def _decode_masked(params, token, position, states, lane_mask,
-                           commit_all):
-            logits, new_states = decode_step(params, cfg, token, position,
-                                             states, kv_source=kv_source)
-            if commit_all:  # static: every lane participated, skip select
-                return logits, new_states
-            return logits, _masked_commit(states, new_states, lane_mask)
-
-        def _prefill_masked(params, tokens, positions, states, lane_mask,
-                            last_idx, commit_all):
-            logits, new_states = forward(params, cfg, tokens,
-                                         positions=positions, states=states,
+        def _packed_masked(params, tokens, positions, states, lane_mask,
+                           last_idx, commit_all):
+            lg, new_states = packed_step(params, cfg, tokens, positions,
+                                         states, last_idx=last_idx,
                                          kv_source=kv_source)
-            # each lane's last VALID token logits (chunks are right-padded)
-            lg = jnp.take_along_axis(logits, last_idx[:, None, None],
-                                     axis=1)[:, 0]
-            if commit_all:
+            if commit_all:  # static: every lane participated, skip select
                 return lg, new_states
             return lg, _masked_commit(states, new_states, lane_mask)
 
-        # one compile per chunk bucket (static shapes), not per prompt len;
-        # commit_all is static — the all-lanes steady state skips the
-        # full-tree lane select (pure extra cache traffic there)
-        self._decode = jax.jit(_decode_masked, static_argnums=(5,))
-        self._prefill = jax.jit(_prefill_masked, static_argnums=(6,))
+        # ONE jitted callable for prefill, decode, and mixed packed batches:
+        # XLA compiles one program per (bucket, commit_all) — the old
+        # prefill/decode dual compile caches are gone.  commit_all is
+        # static: the all-lanes steady state skips the full-tree lane
+        # select (pure extra cache traffic there).
+        self._step_fn = jax.jit(_packed_masked, static_argnums=(6,))
 
         def _reset_lane(states, lane):
             """Clear one batch lane back to its init value (fresh request)."""
@@ -168,29 +197,40 @@ class ServingEngine:
         self.queue: list[dict] = []
         self.finished: list[dict] = []
         self._submitted = 0
-        self.stats: dict[str, Any] = {
-            "requests": 0, "prefill_tokens": 0, "pad_tokens": 0,
-            "prefill_chunks": {}, "prefix_len_hist": {},
-            "decode_steps": 0, "legacy_prefill_tokens": 0,
-        }
+        self.stats: dict[str, Any] = {}
+        self.reset_stats()
 
-    def _chunk_buckets(self) -> tuple[int, ...]:
-        """Static chunk lengths for batched prefill.
+    def _resolve_mode(self) -> str:
+        """'packed' | 'chunked' | 'tokenwise' (recurrent archs: tokenwise —
+        their recurrence would consume pad tokens)."""
+        if self.cfg.has_recurrent_state:
+            return "tokenwise"
+        if self.scfg.token_budget > 0:
+            # budget 1 is legal: bucket-1 packed, i.e. one token per lane
+            return "packed"
+        if self.scfg.prefill_chunk > 1:
+            return "chunked"
+        return "tokenwise"
 
-        Power-of-two lengths up to ``prefill_chunk``, strictly below
-        ``max_seq``.  Sliding-window ring caches are widened by the
-        largest bucket (``_window_slack``), so every cache stays strictly
-        LONGER than any chunk: a chunk of exactly cache length would take
+    def _token_buckets(self) -> tuple[int, ...]:
+        """Static row lengths for the packed forward.
+
+        Power-of-two lengths up to the mode's cap (``token_budget`` packed,
+        ``prefill_chunk`` chunked), strictly below ``max_seq``.  Sliding-
+        window ring caches are widened by the largest bucket
+        (``_window_slack``), so every cache stays strictly LONGER than any
+        per-lane span: a span of exactly cache length would take
         _write_cache's full-assign path (erasing older in-window history)
         and a longer one would scatter duplicate ring slots in a single
-        write — implementation-defined in JAX.  Empty tuple =
-        token-at-a-time prefill — the legacy path, also forced for
-        recurrent-state archs whose recurrence would consume pad tokens.
+        write — implementation-defined in JAX.  Bucket 1 (the all-decode
+        steady state) is always present in packed mode.  Empty tuple =
+        tokenwise (every call is a single-token row).
         """
-        cap = self.scfg.prefill_chunk
-        if cap <= 1 or RECURRENT_KINDS & set(self.cfg.block_kinds):
+        if self._mode == "tokenwise":
             return ()
-        out, b = [], 2
+        cap = (self.scfg.token_budget if self._mode == "packed"
+               else self.scfg.prefill_chunk)
+        out, b = [1] if self._mode == "packed" else [], 2
         while b <= cap:
             if b < self.scfg.max_seq:
                 out.append(b)
@@ -200,28 +240,66 @@ class ServingEngine:
         return tuple(sorted(out))
 
     @property
+    def mode(self) -> str:
+        """Active schedule: 'packed', 'chunked', or 'tokenwise'."""
+        return self._mode
+
+    @property
     def chunk_buckets(self) -> tuple[int, ...]:
-        """Static prefill chunk lengths in use (empty = token-at-a-time)."""
+        """Static packed-row lengths in use (empty = tokenwise)."""
         return self._buckets
 
     def warmup(self) -> None:
-        """Compile every chunk-bucket prefill program plus the decode
-        program outside any measurement window: one LONE request of
-        exactly the bucket length hits that bucket (drained one at a time
-        — co-resident requests would share the largest bucket).  Clears
-        the finished list and stats afterwards; note warmup advances the
-        submission counter, so it shifts later requests' PRNG streams."""
-        for bl in (self._buckets or (1,)):
-            self.submit([2 + (i % 5) for i in range(bl)], max_new=2,
-                        request_id=f"_warmup{bl}")
+        """Compile EVERY program variant outside any measurement window:
+        both ``commit_all`` variants of every bucket.
+
+        One LONE request of exactly the bucket length exercises each
+        bucket end to end (admit, reset, sample — drained one at a time;
+        co-resident requests would share the largest bucket) and compiles
+        the partial-mask (``commit_all=False``) variants.  Warmup requests
+        live in a RESERVED PRNG key space (the top of the uint32 fold
+        range) and do not advance the submission counter, so later
+        requests' sampled tokens are identical with or without warmup.
+
+        The all-lanes steady state (``mask.all()``) is a DIFFERENT static
+        program a lone request can never reach; it is compiled per bucket
+        with an all-pad dummy batch — every position is -1, so cache
+        writes are dropped and the committed states are unchanged (and
+        lanes are reset on admission regardless).  Clears the finished
+        list and stats afterwards."""
+        for bl in [b for b in self._buckets if b > 1]:
+            self._submit_warmup([2 + (i % 5) for i in range(bl)], bl)
             self.run_until_drained()
+        # bucket-1 program (the all-decode steady state / tokenwise row)
+        self._submit_warmup([2], 1)
+        self.run_until_drained()
+        b = self.scfg.batch_lanes
+        # bucket 1 always participates even when absent from the table
+        # (chunked mode): the all-lanes-DECODING steady state is the
+        # dominant production program
+        for t in sorted({1, *self._buckets}):
+            _, self.states = self._step_fn(
+                self.params, jnp.zeros((b, t), jnp.int32),
+                jnp.full((b, t), -1, jnp.int32), self.states,
+                jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32), True)
         self.finished.clear()
         self.reset_stats()
 
+    def _submit_warmup(self, prompt: list[int], bucket: int) -> None:
+        """Queue a warmup request keyed in the reserved stream space at the
+        TOP of the uint32 fold range (-1 - bucket mod 2^32 — fold_in
+        coerces to uint32, so real submission ids counting up from 0 can
+        never collide) — never touches ``_submitted``."""
+        self.queue.append({"prompt": list(prompt), "max_new": 2,
+                           "id": f"_warmup{bucket}", "generated": [],
+                           "_seq": 2 ** 32 - 1 - bucket})
+
     def reset_stats(self) -> None:
-        self.stats.update(requests=0, prefill_tokens=0, pad_tokens=0,
-                          decode_steps=0, legacy_prefill_tokens=0,
-                          prefill_chunks={}, prefix_len_hist={})
+        self.stats = {
+            "requests": 0, "steps": 0, "forwards": {},
+            "prompt_tokens": 0, "decode_tokens": 0, "pad_tokens": 0,
+            "budget_tokens": 0, "prefix_len_hist": {},
+        }
 
     # -- API -------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 32, request_id=None):
@@ -265,111 +343,128 @@ class ServingEngine:
         if done:
             self._finish_lane(lane)
 
-    def _step_keys(self):
-        """(B, 2) sampling keys: lane stream folded at the current position
-        — deterministic per (request, position), not per engine iteration."""
+    def _keys_at(self, key_pos):
+        """(B, 2) sampling keys: lane stream folded at each lane's own fed
+        position — deterministic per (request, position), never per engine
+        iteration or scheduling mode."""
         return jax.vmap(jax.random.fold_in)(
-            self.lane_keys, jnp.asarray(self.lane_pos))
+            self.lane_keys, jnp.asarray(key_pos))
 
-    # -- chunked prefill --------------------------------------------------
-    def _prefill_chunk_step(self, lanes: list[int]) -> None:
-        b = self.scfg.batch_lanes
-        cap = self._buckets[-1]
-        chunk: dict[int, int] = {}
-        for lane in list(lanes):
+    # -- packed forward over a per-lane token plan ------------------------
+    def _plan_tokens(self, lanes: list[int], budget: int) -> dict[int, int]:
+        """Per-lane token counts for one forward: generating lanes take 1,
+        prefilling lanes waterfill the remaining budget — shortest pending
+        prompt first, so a short prompt takes only what it needs and the
+        leftover flows to longer ones (each lane gets at least 1 token,
+        capped at the largest bucket, its pending prompt, and its
+        remaining sequence room).  Lanes whose prompt exhausted the
+        sequence budget are finished here."""
+        cap = self._buckets[-1] if self._buckets else 1
+        prefilling = [l for l in lanes
+                      if self.lane_request[l]["_pending_prompt"]]
+        plan = {l: 1 for l in lanes if l not in prefilling}
+        if not prefilling:
+            return plan
+        left = budget - len(plan)
+        order = sorted(prefilling, key=lambda l: (
+            len(self.lane_request[l]["_pending_prompt"]), l))
+        for i, lane in enumerate(order):
             room = self.scfg.max_seq - 1 - int(self.lane_pos[lane])
             if room <= 0:  # prompt exhausted the sequence budget
-                lanes.remove(lane)
                 self._finish_lane(lane)
                 continue
-            chunk[lane] = min(
-                len(self.lane_request[lane]["_pending_prompt"]), cap, room)
-        if not lanes:
+            share = max(left // (len(order) - i), 1)
+            pending = len(self.lane_request[lane]["_pending_prompt"])
+            plan[lane] = max(min(pending, share, cap, room), 1)
+            left -= plan[lane]
+        return plan
+
+    def _run_lanes(self, plan: dict[int, int]) -> None:
+        """ONE packed forward: each lane in ``plan`` contributes its token
+        count (prompt tokens if it is still consuming its prompt, else its
+        last sampled token), rows right-padded with position -1 up to the
+        smallest bucket that fits.  Logits gather at per-lane last valid
+        indices; sampling keys fold at per-lane last fed positions."""
+        if not plan:
             return
-        need = max(chunk.values())
-        t = next(bk for bk in self._buckets if bk >= need)
+        b = self.scfg.batch_lanes
+        need = max(plan.values())
+        t = need if need == 1 else next(
+            bk for bk in self._buckets if bk >= need)
         tok = np.zeros((b, t), np.int32)
         pos = np.full((b, t), -1, np.int32)   # -1 = pad: cache write dropped
         last_idx = np.zeros(b, np.int32)
         mask = np.zeros(b, bool)
-        for lane in lanes:
-            c = chunk[lane]
+        key_pos = self.lane_pos.copy()
+        n_prompt = n_decode = 0
+        for lane, c in plan.items():
             req = self.lane_request[lane]
-            tok[lane, :c] = req["_pending_prompt"][:c]
-            pos[lane, :c] = np.arange(self.lane_pos[lane],
-                                      self.lane_pos[lane] + c)
+            p0 = int(self.lane_pos[lane])
+            if req["_pending_prompt"]:
+                tok[lane, :c] = req["_pending_prompt"][:c]
+                n_prompt += c
+            else:
+                if req["generated"]:
+                    tok[lane, 0] = req["generated"][-1]
+                n_decode += 1                 # c == 1 for generating lanes
+            pos[lane, :c] = np.arange(p0, p0 + c)
             last_idx[lane] = c - 1
+            key_pos[lane] = p0 + c - 1        # last fed position
             mask[lane] = True
-        lg, self.states = self._prefill(
+        lg, self.states = self._step_fn(
             self.params, jnp.asarray(tok), jnp.asarray(pos), self.states,
             jnp.asarray(mask), jnp.asarray(last_idx), bool(mask.all()))
+        nxt = np.asarray(_sample(lg, self.scfg.temperature,
+                                 self._keys_at(key_pos)))
         st = self.stats
-        st["prefill_chunks"][t] = st["prefill_chunks"].get(t, 0) + 1
-        st["prefill_tokens"] += sum(chunk.values())
-        st["pad_tokens"] += t * len(lanes) - sum(chunk.values())
-        # sample the boundary token for lanes that just finished their prompt
-        # (key folded at the LAST prompt position — same as the decode path)
-        pre_pos = self.lane_pos.copy()
-        for lane in lanes:
-            self.lane_pos[lane] = pre_pos[lane] + chunk[lane] - 1
-        nxt = np.asarray(_sample(lg, self.scfg.temperature, self._step_keys()))
-        for lane in lanes:
-            c = chunk[lane]
+        st["forwards"][t] = st["forwards"].get(t, 0) + 1
+        st["prompt_tokens"] += n_prompt
+        st["decode_tokens"] += n_decode
+        st["pad_tokens"] += t * len(plan) - n_prompt - n_decode
+        for lane, c in plan.items():
             req = self.lane_request[lane]
-            del req["_pending_prompt"][:c]
-            self.lane_pos[lane] = pre_pos[lane] + c
-            if not req["_pending_prompt"]:
-                req["generated"].append(int(nxt[lane]))
-            self._check_done(lane)
-
-    # -- decode (and legacy token-at-a-time prefill) ----------------------
-    def _decode_lanes_step(self, lanes: list[int]) -> None:
-        b = self.scfg.batch_lanes
-        tok = np.zeros((b, 1), np.int32)
-        pos = np.full((b, 1), -1, np.int32)   # -1 = masked lane, write dropped
-        mask = np.zeros(b, bool)
-        for lane in lanes:
-            req = self.lane_request[lane]
-            if req["_pending_prompt"]:        # legacy prompt feed
-                tok[lane, 0] = req["_pending_prompt"][0]
-            elif req["generated"]:
-                tok[lane, 0] = req["generated"][-1]
-            pos[lane, 0] = self.lane_pos[lane]
-            mask[lane] = True
-        logits, self.states = self._decode(
-            self.params, jnp.asarray(tok), jnp.asarray(pos), self.states,
-            jnp.asarray(mask), bool(mask.all()))
-        nxt = np.asarray(_sample(logits, self.scfg.temperature,
-                                 self._step_keys()))
-        self.stats["decode_steps"] += 1
-        for lane in lanes:
-            req = self.lane_request[lane]
-            self.lane_pos[lane] += 1
+            self.lane_pos[lane] += c
             if req["_pending_prompt"]:
-                req["_pending_prompt"].pop(0)
-                self.stats["legacy_prefill_tokens"] += 1
+                del req["_pending_prompt"][:c]
                 if not req["_pending_prompt"]:
+                    # boundary token: sampled from the last prompt logit,
+                    # key folded at the last prompt position (= decode rule)
                     req["generated"].append(int(nxt[lane]))
             else:
                 req["generated"].append(int(nxt[lane]))
             self._check_done(lane)
 
+    # -- scheduler --------------------------------------------------------
     def step(self) -> None:
-        """One engine iteration: a prefill chunk for lanes still consuming
-        their prompt, interleaved with one decode for generating lanes."""
+        """One engine iteration.  Packed mode: ONE forward mixing prefill
+        chunk tokens and decode tokens under ``token_budget`` — no
+        prefill/decode phase split.  Chunked mode: the PR 2 two-call
+        schedule (prefill chunk, then decode) over the same program family.
+        Tokenwise: single-token rows for every lane."""
         self._admit()
         if not self.lane_active.any():
             return
-        lanes = range(self.scfg.batch_lanes)
-        prefilling = [l for l in lanes if self.lane_active[l]
-                      and self._buckets
-                      and self.lane_request[l]["_pending_prompt"]]
-        if prefilling:
-            self._prefill_chunk_step(prefilling)
-        decoding = [l for l in lanes if self.lane_active[l]
-                    and l not in prefilling]
-        if decoding:
-            self._decode_lanes_step(decoding)
+        self.stats["steps"] += 1
+        lanes = [l for l in range(self.scfg.batch_lanes)
+                 if self.lane_active[l]]
+        if self._mode == "packed":
+            self.stats["budget_tokens"] += self.scfg.token_budget
+            self._run_lanes(self._plan_tokens(lanes, self.scfg.token_budget))
+            return
+        if self._mode == "chunked":
+            prefilling = [l for l in lanes
+                          if self.lane_request[l]["_pending_prompt"]]
+            if prefilling:
+                # budget = lanes x cap: every lane gets a full chunk share
+                self._run_lanes(self._plan_tokens(
+                    prefilling, len(prefilling) * self._buckets[-1]))
+            decoding = [l for l in lanes if self.lane_active[l]
+                        and l not in prefilling]
+            if decoding:
+                self._run_lanes({l: 1 for l in decoding})
+            return
+        # tokenwise: prompts feed one token per call (recurrent-arch safe)
+        self._run_lanes({l: 1 for l in lanes})
 
     def run_until_drained(self, max_iters: int = 10_000) -> list[dict]:
         it = 0
@@ -380,14 +475,19 @@ class ServingEngine:
 
     def stats_summary(self) -> str:
         st = self.stats
-        chunks = ",".join(f"{k}:{v}" for k, v in
-                          sorted(st["prefill_chunks"].items()))
+        fwd = ",".join(f"{k}:{v}" for k, v in sorted(st["forwards"].items()))
         hist = ",".join(f"<={k}:{v}" for k, v in
                         sorted(st["prefix_len_hist"].items()))
-        pads = st["pad_tokens"]
-        total = st["prefill_tokens"] + pads
-        eff = 100.0 * st["prefill_tokens"] / total if total else 100.0
-        return (f"requests={st['requests']} decode_steps={st['decode_steps']} "
-                f"prefill_tokens={st['prefill_tokens']} "
-                f"(legacy={st['legacy_prefill_tokens']}) "
-                f"chunk_eff={eff:.0f}% chunks[{chunks}] prefix_hist[{hist}]")
+        valid = st["prompt_tokens"] + st["decode_tokens"]
+        total = valid + st["pad_tokens"]
+        eff = 100.0 * valid / total if total else 100.0
+        fill = (100.0 * valid / st["budget_tokens"]
+                if st["budget_tokens"] else 0.0)
+        share = 100.0 * st["decode_tokens"] / valid if valid else 0.0
+        out = (f"mode={self._mode} requests={st['requests']} "
+               f"steps={st['steps']} prompt_tokens={st['prompt_tokens']} "
+               f"decode_tokens={st['decode_tokens']} (share={share:.0f}%) "
+               f"row_eff={eff:.0f}% forwards[{fwd}] prefix_hist[{hist}]")
+        if st["budget_tokens"]:
+            out += f" budget_fill={fill:.0f}%"
+        return out

@@ -80,6 +80,34 @@ class TestTileLegality:
         autotune.reset_measured_cache()
         assert autotune.attention_pv_blocks(512, 512, 64) == (8, 8)
 
+    def test_packed_blocks_divide_bucket_and_cache(self):
+        """The packed serving family (mixed prefill+decode rows vs a long
+        cache) returns tiles dividing both the budget bucket and the cache
+        length, and VMEM-feasible ones."""
+        for t, s in [(1, 128), (8, 2048), (16, 128), (32, 4096),
+                     (64, 32768)]:
+            bq, bk = autotune.packed_blocks(t, s, 64, arch="starcoder2-3b")
+            assert t % bq == 0 and s % bk == 0, (t, s, bq, bk)
+        from repro.core.costmodel import packed_attention_tile_cost
+        bq, bk = autotune.packed_blocks(32, 4096, 64, arch="starcoder2-3b")
+        assert packed_attention_tile_cost(32, 4096, 64, bq, bk) < float("inf")
+
+    def test_packed_small_bucket_takes_whole_rows(self):
+        """Serving buckets are small: re-streaming the cache per query
+        sub-block can never pay off, so bq must cover the whole bucket."""
+        for t in (2, 4, 8, 16, 32):
+            bq, _ = autotune.packed_blocks(t, 2048, 64, arch="any")
+            assert bq == t, (t, bq)
+
+    def test_packed_measured_override(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "measured.json"))
+        autotune.reset_measured_cache()
+        autotune.record("packed/16x128x64/starcoder2-3b/jnp", (8, 8), 1.0)
+        autotune.reset_measured_cache()
+        assert autotune.packed_blocks(
+            16, 128, 64, arch="starcoder2-3b", backend="jnp") == (8, 8)
+
     def test_rowwise_blocks_sublane_aligned(self):
         for m in (1, 7, 8, 100, 4096):
             bm = autotune.rowwise_blocks(m, 2048)

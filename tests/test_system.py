@@ -151,6 +151,16 @@ class TestCompression:
         assert payload["q"]["w"].dtype == jnp.int8
 
 
+MODES = {
+    # mode -> ServeConfig(token_budget, prefill_chunk) overrides
+    "tokenwise": dict(token_budget=0, prefill_chunk=0),
+    "chunked": dict(token_budget=0, prefill_chunk=4),
+    "chunked_oneshot": dict(token_budget=0, prefill_chunk=32),
+    "packed": dict(token_budget=8),
+    "packed_wide": dict(token_budget=32),
+}
+
+
 class TestServing:
     _cfg = None
     _params = None
@@ -170,6 +180,7 @@ class TestServing:
 
     def test_engine_completes_and_resets_lanes(self):
         eng = self._engine()
+        assert eng.mode == "packed"  # packing is the default schedule
         for i in range(5):
             eng.submit([3, 4, 5], max_new=6, request_id=i)
         done = eng.run_until_drained()
@@ -187,28 +198,30 @@ class TestServing:
         assert len(outs) == 1
 
     @pytest.mark.parametrize("int8_kv", [False, True])
-    def test_chunked_prefill_matches_oneshot_greedy(self, int8_kv):
-        """Chunked prefill (small buckets), one-shot prefill (chunk covers
-        the whole prompt) and legacy token-at-a-time produce IDENTICAL
-        greedy tokens — chunking is a scheduling change, not a numerical
-        one — including over the int8 KV cache."""
+    def test_all_schedules_match_greedy(self, int8_kv):
+        """Packed (small and wide budget), chunked (small buckets and
+        one-shot) and token-at-a-time produce IDENTICAL greedy tokens —
+        packing/chunking are scheduling changes, not numerical ones —
+        including over the int8 KV cache."""
         prompts = [[7, 8, 9, 10, 11, 12, 13, 14, 15], [3, 4, 5],
                    [20 + i for i in range(17)], [9, 9, 9, 9, 9]]
 
-        def run(chunk):
-            eng = self._engine(prefill_chunk=chunk, int8_kv=int8_kv)
+        def run(mode):
+            eng = self._engine(int8_kv=int8_kv, **MODES[mode])
             for i, p in enumerate(prompts):
                 eng.submit(p, max_new=5, request_id=i)
             return {d["id"]: d["tokens"] for d in eng.run_until_drained()}
 
-        legacy, chunked, oneshot = run(0), run(4), run(32)
-        assert legacy == chunked == oneshot
+        want = run("tokenwise")
+        for mode in ("chunked", "chunked_oneshot", "packed", "packed_wide"):
+            assert run(mode) == want, mode
 
-    def test_chunked_prefill_sliding_window_ring_slack(self):
-        """Sliding-window arch, prompt >> window (ring wraps): chunked
-        prefill must equal token-at-a-time.  Guards the window-slack
-        allocation — with ring size == window, a C-token chunk write
-        evicts keys still inside the earliest chunk query's window."""
+    @pytest.mark.parametrize("mode", ["chunked", "packed"])
+    def test_sliding_window_ring_slack(self, mode):
+        """Sliding-window arch, prompt >> window (ring wraps): packed and
+        chunked must equal token-at-a-time.  Guards the window-slack
+        allocation — with ring size == window, a C-token span write evicts
+        keys still inside the earliest span query's window."""
         from repro.models.config import ArchConfig
         cfg = ArchConfig(name="swa-test", family="dense", n_layers=2,
                          d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
@@ -217,24 +230,49 @@ class TestServing:
         params = init_params(KEY, cfg)
         prompt = list(range(2, 72))  # 70 tokens: the 32-slot ring wraps
 
-        def run(chunk):
+        def run(**kw):
             eng = ServingEngine(params, cfg,
-                                ServeConfig(batch_lanes=2, max_seq=128,
-                                            prefill_chunk=chunk))
+                                ServeConfig(batch_lanes=2, max_seq=128, **kw))
             eng.submit(prompt, max_new=5, request_id=0)
             return eng.run_until_drained()[0]["tokens"]
 
-        assert run(0) == run(16) == run(64)
+        want = run(**MODES["tokenwise"])
+        assert run(**MODES[mode]) == want
+        assert run(token_budget=0, prefill_chunk=64) == want  # big spans
 
-    def test_chunked_prefill_interleaves_decode(self):
+    def test_span_crossing_ring_wrap_point(self):
+        """A lane whose prefill span straddles the ring wrap (slots
+        ... S-1, 0, 1 ...) must stay exact: the modular scatter writes both
+        sides of the seam in one call.  Window 32 + slack 16 -> 48-slot
+        ring; a 96-token prompt with 16-token spans crosses slot 47->0
+        mid-span (positions 48..63 land on slots 0..15)."""
+        from repro.models.config import ArchConfig
+        cfg = ArchConfig(name="swa-wrap", family="dense", n_layers=2,
+                         d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab_size=256, d_head=16,
+                         block_pattern=("attn_swa",), sliding_window=32)
+        params = init_params(KEY, cfg)
+        prompt = [2 + (i * 7) % 250 for i in range(96)]
+
+        def run(**kw):
+            eng = ServingEngine(params, cfg,
+                                ServeConfig(batch_lanes=2, max_seq=256, **kw))
+            eng.submit(prompt, max_new=4, request_id=0)
+            return eng.run_until_drained()[0]["tokens"]
+
+        want = run(token_budget=0, prefill_chunk=0)
+        assert run(token_budget=16) == want
+        assert run(token_budget=0, prefill_chunk=16) == want
+
+    def test_packed_interleaves_decode_in_one_forward(self):
         """A long prompt admitted while another lane is generating must not
-        stall it: decode steps run between prefill chunks and the early
-        request's output is unchanged."""
-        alone = self._engine(prefill_chunk=4)
+        stall it — and in packed mode the prefill chunk and the decode
+        token share ONE forward per iteration (no phase split)."""
+        alone = self._engine(token_budget=8)
         alone.submit([7, 8, 9], max_new=8, request_id="a")
         want = alone.run_until_drained()[0]["tokens"]
 
-        eng = self._engine(prefill_chunk=4)
+        eng = self._engine(token_budget=8)
         eng.submit([7, 8, 9], max_new=8, request_id="a")
         eng.step()  # lane 0 finishes its prompt, starts generating
         eng.submit(list(range(20, 44)), max_new=4, request_id="b")
@@ -242,17 +280,39 @@ class TestServing:
         by_id = {d["id"]: d["tokens"] for d in done}
         assert by_id["a"] == want  # co-resident prefill didn't disturb it
         assert len(by_id["b"]) == 4
-        assert eng.stats["prefill_chunks"]  # chunked path actually ran
-        assert eng.stats["decode_steps"] > 8  # decode interleaved
+        st = eng.stats
+        # ONE forward per engine iteration: the packed scheduler never
+        # issues separate prefill and decode calls
+        assert sum(st["forwards"].values()) == st["steps"]
+        assert any(t > 1 for t in st["forwards"])  # mixed buckets ran
+        assert st["decode_tokens"] > 8             # decode kept flowing
+
+    def test_chunked_interleaves_decode(self):
+        """Chunked fallback: decode runs in the same iteration as a
+        co-resident prefill chunk (two calls, same program family)."""
+        alone = self._engine(**MODES["chunked"])
+        alone.submit([7, 8, 9], max_new=8, request_id="a")
+        want = alone.run_until_drained()[0]["tokens"]
+
+        eng = self._engine(**MODES["chunked"])
+        eng.submit([7, 8, 9], max_new=8, request_id="a")
+        eng.step()
+        eng.submit(list(range(20, 44)), max_new=4, request_id="b")
+        done = eng.run_until_drained()
+        by_id = {d["id"]: d["tokens"] for d in done}
+        assert by_id["a"] == want
+        assert len(by_id["b"]) == 4
+        assert any(t > 1 for t in eng.stats["forwards"])
+        assert eng.stats["decode_tokens"] > 8
 
     def test_lane_reset_isolation_after_reuse(self):
         """A lane that served a long request then a short one gives the
         short one the same output as a fresh engine would (no KV leak)."""
-        eng = self._engine(batch_lanes=1, prefill_chunk=4)
+        eng = self._engine(batch_lanes=1, token_budget=8)
         eng.submit(list(range(30, 40)), max_new=6, request_id="long")
         eng.submit([5, 6, 7], max_new=6, request_id="short")
         reused = {d["id"]: d["tokens"] for d in eng.run_until_drained()}
-        fresh = self._engine(batch_lanes=1, prefill_chunk=4)
+        fresh = self._engine(batch_lanes=1, token_budget=8)
         fresh.submit([5, 6, 7], max_new=6, request_id="short")
         assert reused["short"] == fresh.run_until_drained()[0]["tokens"]
 
@@ -262,23 +322,26 @@ class TestServing:
         probe = self._engine()
         probe.submit([7, 8, 9, 10], max_new=1)
         first = probe.run_until_drained()[0]["tokens"][0]
-        eng = self._engine(eos_token=first, prefill_chunk=4)
+        eng = self._engine(eos_token=first, token_budget=8)
         for i in range(3):
             eng.submit([7, 8, 9, 10], max_new=32, request_id=i)
         done = eng.run_until_drained()
         assert len(done) == 3
         assert all(d["tokens"] == [first] for d in done)
 
-    def test_max_new_exact(self):
-        for chunk in (0, 4):
-            eng = self._engine(prefill_chunk=chunk, eos_token=-1)
-            eng.submit([3, 4, 5, 6], max_new=7)
-            assert len(eng.run_until_drained()[0]["tokens"]) == 7
+    @pytest.mark.parametrize("mode", ["tokenwise", "chunked", "packed"])
+    def test_max_new_exact(self, mode):
+        eng = self._engine(eos_token=-1, **MODES[mode])
+        eng.submit([3, 4, 5, 6], max_new=7)
+        assert len(eng.run_until_drained()[0]["tokens"]) == 7
 
-    def test_max_seq_truncates(self):
+    @pytest.mark.parametrize("mode", ["chunked", "packed"])
+    def test_max_seq_truncates(self, mode):
         """max_seq bounds the lane: generation stops at the sequence budget
         and a prompt that exhausts it still drains (no infinite loop)."""
-        eng = self._engine(max_seq=16, prefill_chunk=4, eos_token=-1)
+        eng = self._engine(max_seq=16, eos_token=-1,
+                           **{**MODES[mode], "token_budget":
+                              4 if mode == "packed" else 0})
         eng.submit([3] * 10, max_new=100, request_id="gen")
         eng.submit([4] * 30, max_new=100, request_id="longprompt")
         done = eng.run_until_drained(max_iters=500)
@@ -287,13 +350,53 @@ class TestServing:
         assert 1 <= len(by_id["gen"]) <= 16 - 10
         assert len(by_id["longprompt"]) == 0  # prompt ate the whole budget
 
+    @pytest.mark.parametrize("mode", ["chunked", "packed"])
+    def test_prompt_exactly_max_seq_minus_one(self, mode):
+        """Prompt of exactly max_seq - 1 tokens: the lane fills every
+        position, emits its single boundary token, and terminates on the
+        sequence budget — identical across schedules."""
+        def run(m):
+            eng = self._engine(max_seq=32, eos_token=-1, **MODES[m])
+            eng.submit(list(range(2, 2 + 31)), max_new=100, request_id=0)
+            return eng.run_until_drained(max_iters=500)[0]["tokens"]
+
+        want = run("tokenwise")
+        assert len(want) == 1  # boundary token, then max_seq cut
+        assert run(mode) == want
+
+    @pytest.mark.parametrize("mode", ["chunked", "packed"])
+    def test_prompt_ends_on_bucket_boundary(self, mode):
+        """A prompt whose length is exactly a bucket (8): one full-row
+        forward consumes it and the boundary sample must match the
+        token-at-a-time result (off-by-one guard on last_idx/key fold)."""
+        def run(m):
+            eng = self._engine(**MODES[m])
+            eng.submit(list(range(10, 18)), max_new=5, request_id=0)  # len 8
+            return eng.run_until_drained()[0]["tokens"]
+
+        assert run(mode) == run("tokenwise")
+
+    @pytest.mark.parametrize("mode", ["chunked", "packed"])
+    def test_tiny_max_seq_degrades_gracefully(self, mode):
+        """max_seq so small that no multi-token bucket fits below it:
+        chunked (whose bucket table is empty) must demote to
+        token-at-a-time instead of crashing; packed keeps its always-legal
+        bucket-1 program.  Both must drain."""
+        eng = self._engine(max_seq=2, eos_token=-1, **MODES[mode])
+        want = {"chunked": "tokenwise", "packed": "packed"}[mode]
+        assert eng.mode == want
+        assert eng.chunk_buckets in ((), (1,))
+        eng.submit([3, 4, 5], max_new=4, request_id=0)
+        done = eng.run_until_drained(max_iters=50)
+        assert len(done) == 1  # drained (prompt ate the 2-slot budget)
+
     def test_per_lane_prng_decorrelated_and_lane_count_invariant(self):
         """temperature>0: identical prompts in different requests sample
         DIFFERENT streams, and a request's tokens don't depend on lane
         count or co-resident traffic (keys fold request id + position)."""
         def run(lanes, n):
             eng = self._engine(batch_lanes=lanes, temperature=0.9,
-                               prefill_chunk=4, seed=3)
+                               token_budget=8, seed=3)
             for i in range(n):
                 eng.submit([5, 6, 7, 8], max_new=6, request_id=i)
             return {d["id"]: d["tokens"] for d in eng.run_until_drained()}
@@ -302,6 +405,55 @@ class TestServing:
         four = run(4, 4)
         assert two == four                      # lane-count invariant
         assert len({tuple(v) for v in two.values()}) > 1  # decorrelated
+
+    def test_sampled_tokens_mode_invariant(self):
+        """temperature>0: keys fold (submission id, position) only, so the
+        SAMPLED tokens are identical under packed, chunked, and tokenwise
+        scheduling — not just the greedy ones."""
+        prompts = [[7, 8, 9, 10, 11], [3, 4, 5], [20 + i for i in range(9)]]
+
+        def run(mode):
+            eng = self._engine(temperature=0.9, seed=3, **MODES[mode])
+            for i, p in enumerate(prompts):
+                eng.submit(p, max_new=5, request_id=i)
+            return {d["id"]: d["tokens"] for d in eng.run_until_drained()}
+
+        want = run("tokenwise")
+        assert run("chunked") == want
+        assert run("packed") == want
+
+    def test_warmup_does_not_shift_request_streams(self):
+        """warmup() compiles every bucket program but keys its requests in
+        a reserved stream space: serving after warmup samples exactly what
+        serving without warmup would."""
+        def run(warm):
+            eng = self._engine(temperature=0.9, seed=3, token_budget=8)
+            if warm:
+                eng.warmup()
+                assert eng.stats["requests"] == 0  # stats cleared
+            for i in range(3):
+                eng.submit([5, 6, 7, 8], max_new=6, request_id=i)
+            return {d["id"]: d["tokens"] for d in eng.run_until_drained()}
+
+        assert run(warm=True) == run(warm=False)
+
+    @pytest.mark.parametrize("mode", ["chunked", "packed"])
+    def test_warmup_compiles_every_program_variant(self, mode):
+        """After warmup() no traffic pattern may trigger a fresh compile:
+        both commit_all variants of every bucket (bucket 1 included, even
+        in chunked mode whose table omits it) are already built — the
+        all-lanes steady state in particular, which lone warmup requests
+        can never reach through the scheduler."""
+        eng = self._engine(**{**MODES[mode],
+                              "token_budget": 8 if mode == "packed" else 0})
+        eng.warmup()
+        n0 = eng._step_fn._cache_size()
+        assert n0 == 2 * len({1, *eng.chunk_buckets})  # bucket x commit_all
+        for i in range(5):  # all lanes busy -> commit_all=True paths
+            eng.submit([5 + i, 6, 7, 8, 9, 10, 11][: 3 + i], max_new=4,
+                       request_id=i)
+        eng.run_until_drained()
+        assert eng._step_fn._cache_size() == n0  # zero in-flight compiles
 
 
 class TestShardingRules:
