@@ -2,8 +2,9 @@
 # Tier-1 verification: full test suite + a ~30 s benchmark smoke that must
 # leave machine-readable perf artifacts at the repo root (run.py fails if
 # BENCH_*.json would lose a previously present key), an examples smoke
-# (quickstart + a 4-request packed serving drain), a packed-vs-chunked-vs-
-# tokenwise greedy-equivalence smoke, and a doc link check.
+# (quickstart + 4-request packed serving drains: a bf16 one and a SwiGLU
+# w8a8 one exercising the fused dual-GEMM gated-MLP path), a packed-vs-
+# chunked-vs-tokenwise greedy-equivalence smoke, and a doc link check.
 #
 # Usage: scripts/verify.sh
 set -euo pipefail
@@ -31,6 +32,10 @@ PYTHONPATH=src python examples/quickstart.py
 echo "== serving drain smoke (packed step, 4 requests) =="
 PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --reduced \
     --requests 4 --max-new 4 --lanes 2 --max-seq 64 --token-budget 8
+
+echo "== SwiGLU w8a8 serving drain smoke (fused dual-GEMM gated MLP) =="
+PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b --reduced \
+    --w8a8 --requests 4 --max-new 4 --lanes 2 --max-seq 64 --token-budget 8
 
 echo "== packed/chunked/tokenwise greedy-equivalence smoke =="
 PYTHONPATH=src python scripts/greedy_equiv_smoke.py

@@ -135,6 +135,71 @@ def gemm_tile_cost(m: int, k: int, n: int, bm: int, bn: int, bk: int,
     return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES
 
 
+def gated_mlp_tile_cost(m: int, k: int, n: int, bm: int, bn: int, bk: int,
+                        in_bytes: int = 1, out_bytes: int = 2) -> float:
+    """Estimated cycles for the dual-GEMM gated MLP with tile (bm, bn, bk).
+
+    Same grid as ``gemm_tile_cost`` but with TWO weight streams sharing one
+    A tile and TWO resident accumulators: per step the HBM traffic is one
+    (bm, bk) activation tile plus two (bk, bn) weight tiles, the compute is
+    two MXU contractions, and the VMEM working set doubles the accumulator
+    footprint (the activated output replaces a separate epilogue pass, so
+    only ONE (bm, bn) output tile is written per (m, n) grid cell).
+    """
+    gm, gn, gk = _cdiv(m, bm), _cdiv(n, bn), _cdiv(k, bk)
+    vmem = (2 * (bm * bk + 2 * bk * bn) * in_bytes
+            + 2 * bm * bn * 4 + bm * bn * out_bytes)
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    steps = gm * gn * gk
+    compute = steps * 2 * (bm * bn * bk) / TPU_MACS_PER_CYCLE
+    hbm = (steps * (bm * bk + 2 * bk * bn) * in_bytes
+           + gm * gn * bm * bn * out_bytes) / TPU_HBM_BYTES_PER_CYCLE
+    return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES
+
+
+# MoE dispatch constants: per-direction all-to-all bandwidth on the model
+# axis (ICI, v5e-class ballpark) and the fixed fan-out latency one grouped
+# all-to-all pays regardless of payload.  Global constants, never per-arch.
+TPU_ICI_BYTES_PER_CYCLE = 100          # ~94 GB/s per direction at ~940 MHz
+TPU_A2A_LATENCY_CYCLES = 8000          # ~8.5 us all-to-all setup/fan-out
+
+
+def moe_capacity(sg: int, e: int, k: int, capacity_factor: float) -> int:
+    """GShard per-expert queue length for an sg-token group (the exact
+    formula ``models/moe.py`` allocates with)."""
+    return min(max(int(capacity_factor * sg * k / e), 4), sg)
+
+
+def moe_dispatch_cost(t: int, d: int, ff: int, e: int, k: int,
+                      capacity_factor: float, sg: int) -> float:
+    """Estimated cycles for one capacity-bounded MoE FFN layer over ``t``
+    tokens at GShard group size ``sg`` (g = t/sg groups).
+
+    The group size trades three effects against each other:
+      * the one-hot dispatch/combine tensors are (G, S, E, C) with
+        C ~ cf*S*k/e, so their HBM footprint grows LINEARLY in sg
+        (quadratic per group) — large groups pay here;
+      * each group's dispatch all-to-all has a fixed fan-out latency, so
+        tiny groups pay g times the setup cost;
+      * the capacity floor (>= 4 slots) and int rounding pad the expert
+        GEMMs relatively harder the smaller the group.
+    Only the RELATIVE cost across candidate sg matters to the tuner.
+    """
+    g = _cdiv(t, sg)
+    cap = moe_capacity(sg, e, k, capacity_factor)
+    # dispatch + combine each stream the (G, S, E, C) f32 one-hot once
+    onehot_bytes = 2 * g * sg * e * cap * 4
+    # (E, G, C, D) bf16 expert inputs/outputs cross the model axis twice
+    a2a_bytes = 2 * e * g * cap * d * 2
+    # expert-GEMM padding waste: rows processed beyond the t*k useful ones
+    waste_rows = max(e * g * cap - t * k, 0)
+    waste = waste_rows * 3 * d * ff / TPU_MACS_PER_CYCLE
+    return (onehot_bytes / TPU_HBM_BYTES_PER_CYCLE
+            + a2a_bytes / TPU_ICI_BYTES_PER_CYCLE
+            + waste + g * TPU_A2A_LATENCY_CYCLES)
+
+
 def attention_tile_cost(s_q: int, s_kv: int, d: int, bq: int, bk: int,
                         in_bytes: int = 2) -> float:
     """Estimated cycles for one (batch*head) slice of flash attention with

@@ -1,10 +1,13 @@
 """Pallas TPU kernels for the NX-CGRA integer execution model.
 
 Kernels (each <name>.py holds the pl.pallas_call + BlockSpec):
-  int8_gemm            W8A8 GEMM, int32 accum, fused requant epilogue
+  int8_gemm            W8A8 GEMM, int32 accum, fused requant epilogue;
+                       dual_gemm_gated = 2-GEMM gated MLP (SwiGLU/GeGLU)
+                       over a shared A tile with in-register activation
   int_softmax          integer-only softmax (I-BERT shift-exp)
   int_layernorm        integer-only LayerNorm/RMSNorm (Newton isqrt)
   int_gelu             integer-only GELU (I-BERT erf polynomial)
+  int_silu             integer-only SiLU (shift-exp sigmoid; SwiGLU gate)
   quantize             absmax row quantization + int32->int8 requant
   conv2d               int8 NHWC convolution (paper's conv benchmark)
   flash_attention      fused bf16 online-softmax attention

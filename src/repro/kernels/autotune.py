@@ -77,11 +77,13 @@ def reset_measured_cache() -> None:
     global _MEASURED
     _MEASURED = None
     gemm_blocks.cache_clear()
+    gated_mlp_blocks.cache_clear()
     attention_blocks.cache_clear()
     attention_pv_blocks.cache_clear()
     packed_blocks.cache_clear()
     decode_blocks.cache_clear()
     rowwise_blocks.cache_clear()
+    moe_group_size.cache_clear()
 
 
 def measure(key: str, candidates, timer) -> tuple[int, ...]:
@@ -115,14 +117,10 @@ _GEMM_BNS = (128, 256, 512)
 _GEMM_BKS = (128, 256, 512)
 
 
-@functools.lru_cache(maxsize=4096)
-def gemm_blocks(m: int, k: int, n: int, dtype: str = "int8",
-                backend: str = "pallas") -> tuple[int, int, int]:
-    """(bm, bn, bk) for an (M,K)x(K,N) GEMM; wrappers pad up to these."""
-    hit = _hit(f"gemm/{m}x{k}x{n}/{dtype}/{backend}")
-    if hit:
-        return hit
-    in_bytes = 1 if dtype == "int8" else 2
+def _gemm_lattice_argmin(m: int, k: int, n: int,
+                         cost_fn) -> tuple[int, int, int]:
+    """Argmin of ``cost_fn(bm, bn, bk)`` over the legal GEMM tile lattice
+    (shared by every GEMM-shaped key family)."""
     best, best_cost = None, float("inf")
     for bm in _GEMM_BMS:
         if bm > max(_round_up(m, SUBLANE), SUBLANE):
@@ -133,11 +131,72 @@ def gemm_blocks(m: int, k: int, n: int, dtype: str = "int8",
             for bk in _GEMM_BKS:
                 if bk > max(_round_up(k, LANE), LANE):
                     continue
-                c = costmodel.gemm_tile_cost(m, k, n, bm, bn, bk,
-                                             in_bytes=in_bytes)
+                c = cost_fn(bm, bn, bk)
                 if c < best_cost:
                     best, best_cost = (bm, bn, bk), c
     assert best is not None and is_mxu_legal(*best), (m, k, n, best)
+    return best
+
+
+@functools.lru_cache(maxsize=4096)
+def gemm_blocks(m: int, k: int, n: int, dtype: str = "int8",
+                backend: str = "pallas") -> tuple[int, int, int]:
+    """(bm, bn, bk) for an (M,K)x(K,N) GEMM; wrappers pad up to these."""
+    hit = _hit(f"gemm/{m}x{k}x{n}/{dtype}/{backend}")
+    if hit:
+        return hit
+    in_bytes = 1 if dtype == "int8" else 2
+    return _gemm_lattice_argmin(
+        m, k, n, lambda bm, bn, bk: costmodel.gemm_tile_cost(
+            m, k, n, bm, bn, bk, in_bytes=in_bytes))
+
+
+@functools.lru_cache(maxsize=4096)
+def gated_mlp_blocks(m: int, k: int, n: int, dtype: str = "int8",
+                     backend: str = "pallas") -> tuple[int, int, int]:
+    """(bm, bn, bk) for the dual-GEMM gated MLP (``dual_gemm_gated``).
+
+    Its own key family — the second weight stream and second resident
+    accumulator halve the VMEM headroom and shift the roofline relative to
+    the single-GEMM table, so a ``gemm/`` optimum need not be optimal here.
+    """
+    hit = _hit(f"gatedmlp/{m}x{k}x{n}/{dtype}/{backend}")
+    if hit:
+        return hit
+    in_bytes = 1 if dtype == "int8" else 2
+    return _gemm_lattice_argmin(
+        m, k, n, lambda bm, bn, bk: costmodel.gated_mlp_tile_cost(
+            m, k, n, bm, bn, bk, in_bytes=in_bytes, out_bytes=2))
+
+
+# GShard group-size candidates for the MoE dispatch tuner (tokens/group)
+_MOE_GROUP_CANDIDATES = (128, 256, 512, 1024, 2048, 4096, 8192)
+
+
+@functools.lru_cache(maxsize=4096)
+def moe_group_size(t: int, d: int, ff: int, e: int, k: int,
+                   capacity_factor: float) -> int:
+    """Tokens per GShard dispatch group for a ``t``-token MoE forward.
+
+    Same table-then-measure policy as the kernel tiles: an exact measured
+    key (``moe/{T}x{D}x{FF}/{E}x{K}x{cf}``) wins, else the capacity-bounded
+    all-to-all cost model (``core.costmodel.moe_dispatch_cost``) picks the
+    argmin over the candidate group sizes.  Candidates are restricted to
+    DIVISORS of ``t`` (one whole-batch group when no listed size divides),
+    so the argmin scores the group size that actually runs; callers keep a
+    defensive power-of-two demotion for measured-cache overrides that do
+    not divide their token count.
+    """
+    hit = _hit(f"moe/{t}x{d}x{ff}/{e}x{k}x{capacity_factor:g}")
+    if hit:
+        return hit[0]
+    cands = [sg for sg in _MOE_GROUP_CANDIDATES
+             if sg <= t and t % sg == 0] or [t]
+    best, best_cost = cands[0], float("inf")
+    for sg in cands:
+        c = costmodel.moe_dispatch_cost(t, d, ff, e, k, capacity_factor, sg)
+        if c < best_cost:
+            best, best_cost = sg, c
     return best
 
 

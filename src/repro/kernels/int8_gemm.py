@@ -20,6 +20,10 @@ in-register — the int32 accumulator NEVER round-trips through HBM:
 Grid: (M/bm, N/bn, K/bk), K innermost so the int32 accumulator tile stays
 resident in VMEM scratch across the K loop (one write to HBM per (m,n)
 tile).  Block sizes come from ``kernels.autotune``.
+
+``dual_gemm_gated`` extends the same structure to the 2-GEMM gated MLP
+(SwiGLU/GeGLU): one shared A-tile stream, two weight streams, two resident
+accumulators, and a dequant + integer-activation(gate) * up epilogue.
 """
 from __future__ import annotations
 
@@ -32,7 +36,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core.inumerics import RequantParams
 from .common import interpret_mode, requant_block
-from .int_gelu import gelu_block, gelu_requant_params
+from .int_gelu import gelu_block, gelu_out_scale, gelu_requant_params
+from .int_silu import silu_block, silu_out_scale
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -182,5 +187,149 @@ def int8_gemm(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), I32)],
+        interpret=interpret_mode() if interpret is None else interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Dual-GEMM gated MLP (SwiGLU / GeGLU): the 2-GEMM fusion the epilogue
+# matrix could not express with one weight stream.  The A tile (x) streams
+# HBM->VMEM ONCE per grid step and feeds BOTH weight streams; two int32
+# (f32 for the float variant) accumulators stay resident in VMEM across the
+# K loop, and the epilogue finishes dequant + activation(gate) * up
+# in-register — neither the (M, N) up/gate accumulator nor the activated
+# gate ever touches HBM.
+# ---------------------------------------------------------------------------
+
+GATED_ACTS = ("silu", "gelu")
+
+
+def _dual_kernel(*refs, n_k: int, act: str, act_scale: float,
+                 g_s1: int, g_mult: int, g_s2: int, integer: bool,
+                 stream_dtype):
+    it = iter(refs)
+    x_ref, wu_ref, wg_ref = next(it), next(it), next(it)
+    xs_ref = us_ref = gs_ref = None
+    if integer:
+        xs_ref, us_ref, gs_ref = next(it), next(it), next(it)
+    out_ref, acc_u, acc_g = next(it), next(it), next(it)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_u[...] = jnp.zeros_like(acc_u)
+        acc_g[...] = jnp.zeros_like(acc_g)
+
+    # the shared A tile: ONE HBM read, two MXU contractions
+    x = x_ref[...]
+    acc_t = I32 if integer else F32
+    acc_u[...] += jax.lax.dot_general(
+        x, wu_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_t)
+    acc_g[...] += jax.lax.dot_general(
+        x, wg_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_t)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        if integer:
+            # mirror the unfused composition EXACTLY: each GEMM dequantizes
+            # through the residual-stream dtype, the gate requantizes at the
+            # static activation scale and runs the integer polynomial
+            h = (acc_u[...].astype(F32) * xs_ref[...] * us_ref[...]
+                 ).astype(stream_dtype)
+            g = (acc_g[...].astype(F32) * xs_ref[...] * gs_ref[...]
+                 ).astype(stream_dtype).astype(F32)
+            q = jnp.clip(jnp.round(g / act_scale), -128, 127).astype(I32)
+            if act == "silu":
+                a = (silu_block(q, scale=act_scale).astype(F32)
+                     * silu_out_scale(act_scale)).astype(stream_dtype)
+            else:
+                a = (gelu_block(q, scale=act_scale, s1=g_s1, mult=g_mult,
+                                s2=g_s2).astype(F32)
+                     * gelu_out_scale(act_scale)).astype(stream_dtype)
+            out_ref[...] = a * h
+        else:
+            g = acc_g[...]
+            a = (jax.nn.silu(g) if act == "silu"
+                 else jax.nn.gelu(g, approximate=False))
+            out_ref[...] = (a * acc_u[...]).astype(stream_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act", "act_scale", "out_dtype", "bm", "bn", "bk",
+                     "interpret"),
+)
+def dual_gemm_gated(
+    x: jax.Array,
+    w_up: jax.Array,
+    w_gate: jax.Array,
+    x_scale: jax.Array | None = None,   # (M, 1) f32 per-row act scales
+    up_scale: jax.Array | None = None,  # (1, N) f32 per-col weight scales
+    gate_scale: jax.Array | None = None,
+    act: str = "silu",
+    act_scale: float | None = None,
+    out_dtype=jnp.bfloat16,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """activation(x @ w_gate) * (x @ w_up) with both GEMMs fused.
+
+    int8 operands (W8A8): requires the three scale operands plus the static
+    ``act_scale``; bit-identical to the unfused scaled-dequant GEMMs ->
+    integer activation -> multiply composition.  Float operands: f32
+    accumulators, float activation epilogue (matches the unfused
+    composition to accumulation order).
+    """
+    m, k = x.shape
+    k2, n = w_up.shape
+    assert k == k2 and w_gate.shape == (k, n), (x.shape, w_up.shape,
+                                                w_gate.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"pad shapes to block multiples first: {(m, k, n)} vs {(bm, bk, bn)}")
+    assert act in GATED_ACTS, act
+    integer = x.dtype == jnp.int8
+    g_s1 = g_mult = g_s2 = 0
+    if integer:
+        assert (x_scale is not None and up_scale is not None
+                and gate_scale is not None and act_scale is not None)
+        if act == "gelu":
+            gp = gelu_requant_params(act_scale)
+            g_s1, g_mult, g_s2 = gp.s1, gp.mult, gp.s2
+
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    operands = [x, w_up, w_gate]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    if integer:
+        operands += [x_scale, up_scale.reshape(1, n),
+                     gate_scale.reshape(1, n)]
+        in_specs += [
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ]
+
+    kernel = functools.partial(
+        _dual_kernel, n_k=n_k, act=act,
+        act_scale=0.0 if act_scale is None else act_scale,
+        g_s1=g_s1, g_mult=g_mult, g_s2=g_s2, integer=integer,
+        stream_dtype=out_dtype)
+    acc_dtype = I32 if integer else F32
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype),
+                        pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret_mode() if interpret is None else interpret,
     )(*operands)

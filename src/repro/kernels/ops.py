@@ -10,10 +10,11 @@ be prohibitive).  ``set_backend("pallas"|"jnp")`` flips the default;
 real-TPU deployments use "pallas".
 
 Fused epilogue entry points (``gemm_i8_gelu``, ``gemm_i8_add``,
-``gemm_w8a8``) keep the int32 GEMM accumulator in-register instead of
-round-tripping it through HBM between the matmul and its consumer; their
-jnp paths are the exact unfused compositions, so both backends are
-bit-identical.
+``gemm_w8a8``, and the dual-GEMM ``gated_mlp``/``gated_mlp_w8a8``) keep
+the int32 GEMM accumulator in-register instead of round-tripping it
+through HBM between the matmul and its consumer; their jnp paths are the
+exact unfused compositions, so both backends are bit-identical (the
+float ``gated_mlp`` matches to accumulation order, like flash attention).
 """
 from __future__ import annotations
 
@@ -26,8 +27,9 @@ from .common import pad_to
 from .conv2d import int8_conv2d
 from .flash_attention import flash_attention
 from .int8_flash_attention import int8_flash_attention
-from .int8_gemm import int8_gemm
+from .int8_gemm import dual_gemm_gated, int8_gemm
 from .int_gelu import int_gelu, gelu_out_scale  # noqa: F401 (re-export)
+from .int_silu import int_silu, silu_out_scale  # noqa: F401 (re-export)
 from .int_layernorm import int_layernorm
 from .int_softmax import int_softmax
 from .quantize import quantize_rows, requantize_i32
@@ -145,6 +147,60 @@ def gemm_w8a8(x_q: jax.Array, x_scale: jax.Array, w_q: jax.Array,
     return out[:m, :n].reshape(*lead, n)
 
 
+def gated_mlp(x: jax.Array, w_up: jax.Array, w_gate: jax.Array,
+              act: str = "silu", compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Fused dual-GEMM gated MLP (float): ``act(x @ w_gate) * (x @ w_up)``
+    with x streamed once and both accumulators resident — the (T, d_ff)
+    gate/up intermediates never touch HBM on the pallas path.  The jnp path
+    is the exact unfused model composition."""
+    x2, lead, m = _gemm_2d(x)
+    k, n = w_up.shape
+    if not _use_pallas():
+        out = ref.gated_mlp_ref(x2, w_up, w_gate, act, compute_dtype)
+        return out.reshape(*lead, n)
+    bm, bn, bk = autotune.gated_mlp_blocks(m, k, n, dtype="bf16")
+    out = dual_gemm_gated(
+        pad_to(x2.astype(compute_dtype), (bm, bk)),
+        pad_to(w_up.astype(compute_dtype), (bk, bn)),
+        pad_to(w_gate.astype(compute_dtype), (bk, bn)),
+        act=act, out_dtype=compute_dtype, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def gated_mlp_w8a8(x_q: jax.Array, x_scale: jax.Array,
+                   w_up_q: jax.Array, up_scale: jax.Array,
+                   w_gate_q: jax.Array, gate_scale: jax.Array,
+                   act: str = "silu", act_scale: float | None = None,
+                   out_dtype=jnp.bfloat16) -> jax.Array:
+    """Fused W8A8 dual-GEMM gated MLP (SwiGLU/GeGLU up+gate projections).
+
+    x_q [..., K] int8 with per-row scales x_scale [..., 1]; both weights
+    [K, N] int8 with per-col scales.  Dequant + integer activation(gate) *
+    up run in the GEMM epilogue; bit-identical to the unfused
+    ``gemm_w8a8 x2 -> silu_i8/gelu_i8 -> multiply`` composition.
+    """
+    assert act_scale is not None, "integer gated MLP needs a static act_scale"
+    x2, lead, m = _gemm_2d(x_q)
+    k, n = w_up_q.shape
+    xs2 = x_scale.reshape(-1, 1)
+    if not _use_pallas():
+        out = ref.gated_mlp_w8a8_ref(x2, xs2, w_up_q, up_scale, w_gate_q,
+                                     gate_scale, act=act,
+                                     act_scale=act_scale,
+                                     out_dtype=out_dtype)
+        return out.reshape(*lead, n)
+    bm, bn, bk = autotune.gated_mlp_blocks(m, k, n)
+    out = dual_gemm_gated(
+        pad_to(x2, (bm, bk)),
+        pad_to(w_up_q, (bk, bn)), pad_to(w_gate_q, (bk, bn)),
+        x_scale=pad_to(xs2, (bm, 1)),
+        up_scale=pad_to(up_scale.reshape(1, n), (1, bn)),
+        gate_scale=pad_to(gate_scale.reshape(1, n), (1, bn)),
+        act=act, act_scale=act_scale, out_dtype=out_dtype,
+        bm=bm, bn=bn, bk=bk)
+    return out[:m, :n].reshape(*lead, n)
+
+
 # ---------------------------------------------------------------------------
 # row-wise integer kernels
 # ---------------------------------------------------------------------------
@@ -188,6 +244,21 @@ def gelu_i8(x: jax.Array, scale: float) -> jax.Array:
     bm, bn = autotune.elementwise_blocks(m, n)
     xp = pad_to(x2, (bm, bn))
     out = int_gelu(xp, scale, bm=bm, bn=bn)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def silu_i8(x: jax.Array, scale: float) -> jax.Array:
+    """Integer SiLU on int payload (real = x*scale): int32 payload out
+    (±127*127 range), dequantize with ``silu_out_scale(scale)``."""
+    if not _use_pallas():
+        return ref.int_silu_ref(x, scale)
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    x2 = x.reshape(-1, n)
+    m = x2.shape[0]
+    bm, bn = autotune.elementwise_blocks(m, n)
+    xp = pad_to(x2, (bm, bn))
+    out = int_silu(xp, scale, bm=bm, bn=bn)
     return out[:m, :n].reshape(*lead, n)
 
 

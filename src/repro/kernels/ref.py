@@ -64,6 +64,47 @@ def gemm_w8a8_ref(x_q, x_scale, w_q, w_scale, bias=None, residual=None,
     return h
 
 
+def int_silu_ref(x, scale):
+    q, _ = inum.i_silu(x.astype(I32), scale)
+    return q.astype(I32)
+
+
+def gated_mlp_ref(x, w_up, w_gate, act="silu", compute_dtype=jnp.bfloat16):
+    """Unfused float gated MLP exactly as ``models.layers`` composes it:
+    two compute-dtype GEMMs, float activation of the gate, multiply."""
+    dims = (((x.ndim - 1,), (0,)), ((), ()))
+    xc = x.astype(compute_dtype)
+    h = jax.lax.dot_general(xc, w_up.astype(compute_dtype), dims,
+                            preferred_element_type=compute_dtype)
+    g = jax.lax.dot_general(xc, w_gate.astype(compute_dtype), dims,
+                            preferred_element_type=compute_dtype)
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=False)
+    return a * h
+
+
+def gated_mlp_w8a8_ref(x_q, x_scale, w_up_q, up_scale, w_gate_q, gate_scale,
+                       act="silu", act_scale=None,
+                       out_dtype=jnp.bfloat16):
+    """Unfused composition the fused dual-GEMM must match bit-for-bit: two
+    scaled-dequant W8A8 GEMMs over the same quantized activations ->
+    integer activation (i_silu / i_gelu polynomial) of the gate at a static
+    scale -> elementwise multiply in the residual-stream dtype."""
+    from .int_gelu import gelu_out_scale
+    from .int_silu import silu_out_scale
+    h = gemm_w8a8_ref(x_q, x_scale, w_up_q, up_scale, out_dtype=out_dtype)
+    g = gemm_w8a8_ref(x_q, x_scale, w_gate_q, gate_scale,
+                      out_dtype=out_dtype)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / act_scale),
+                 -128, 127).astype(I32)
+    if act == "silu":
+        a = (int_silu_ref(q, act_scale).astype(jnp.float32)
+             * silu_out_scale(act_scale)).astype(out_dtype)
+    else:
+        a = (int_gelu_ref(q, act_scale).astype(jnp.float32)
+             * gelu_out_scale(act_scale)).astype(out_dtype)
+    return a * h
+
+
 def int_softmax_ref(x, scale, mask=None):
     return inum.i_softmax(x.astype(I32), scale, mask=mask).astype(jnp.int8)
 

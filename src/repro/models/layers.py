@@ -55,6 +55,12 @@ def linear(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
 # canonical static activation scale for the integer GELU path (the
 # pre-activation clip range [-8, 8] mapped onto int8)
 GELU_INT_SCALE = 8.0 / 127.0
+# same clip range for the integer SiLU (SwiGLU gate).  Below -8 silu is
+# within 3e-3 of 0; above +8 it saturates to ~8 — the same unbounded-above
+# truncation the integer GELU's [-8, 8] range already accepts.  Gate
+# pre-activations live well inside that range for calibrated models
+# (test_w8a8_quality_vs_bf16 guards the end-to-end effect).
+SILU_INT_SCALE = 8.0 / 127.0
 
 
 def linear_w8a8(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
@@ -84,6 +90,22 @@ def linear_gelu_w8a8(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     from ..kernels.int_gelu import gelu_out_scale
     return (out_q.astype(jnp.float32)
             * gelu_out_scale(GELU_INT_SCALE)).astype(compute_dtype)
+
+
+def linear_gated_w8a8(x: jax.Array, up_q: jax.Array, up_scale: jax.Array,
+                      gate_q: jax.Array, gate_scale: jax.Array,
+                      act: str, compute_dtype=DEFAULT_DTYPE) -> jax.Array:
+    """Fused W8A8 gated-MLP hidden (SwiGLU/GeGLU hot path): ONE dynamic
+    activation quant feeds a dual-GEMM over a shared A tile (x read from
+    HBM once, two int8 weight streams), and dequant + integer
+    activation(gate) * up finish in the GEMM epilogue — no (T, d_ff) int32
+    or f32 intermediate through HBM.  Bit-identical to ``linear_w8a8`` x2
+    followed by the integer ``activation`` and the elementwise multiply."""
+    x_q, x_scale = ops.quant_rows(x.astype(jnp.float32))
+    act_scale = GELU_INT_SCALE if act == "gelu" else SILU_INT_SCALE
+    return ops.gated_mlp_w8a8(x_q, x_scale, up_q, up_scale, gate_q,
+                              gate_scale, act=act, act_scale=act_scale,
+                              out_dtype=compute_dtype)
 
 
 def quantize_weight(w: jax.Array) -> dict:
@@ -203,6 +225,14 @@ def activation(x: jax.Array, kind: str, mode: ExecMode) -> jax.Array:
         out = ops.gelu_i8(q, s)
         from ..kernels.int_gelu import gelu_out_scale
         return (out.astype(jnp.float32) * gelu_out_scale(s)).astype(x.dtype)
+    if mode.integer and kind == "silu":
+        # integer-only SiLU (shift-exp sigmoid polynomial) — the SwiGLU
+        # gate stays on the integer datapath like every other non-linearity
+        s = SILU_INT_SCALE
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -128, 127).astype(jnp.int32)
+        out = ops.silu_i8(q, s)
+        from ..kernels.int_silu import silu_out_scale
+        return (out.astype(jnp.float32) * silu_out_scale(s)).astype(x.dtype)
     if kind == "gelu":
         return jax.nn.gelu(x, approximate=False)
     if kind == "silu":

@@ -5,12 +5,14 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import shard_hint
+from ..kernels import ops
 from .config import ArchConfig
 from .layers import (
     ExecMode,
     activation,
     apply_linear,
     dense_init,
+    linear_gated_w8a8,
     linear_gelu_w8a8,
 )
 
@@ -28,9 +30,46 @@ def init_mlp_params(key, cfg: ArchConfig, d_ff: int | None = None,
     return p
 
 
+def gated_ffn_hidden(params: dict, x: jax.Array, cfg: ArchConfig,
+                     mode: ExecMode, hint: bool = False) -> jax.Array:
+    """``activation(x @ w_gate) * (x @ w_in)`` — the gated hidden shared by
+    dense MLPs and MoE experts (one fused datapath for both).
+
+    Integer path: the fused dual-GEMM kernel (shared A tile, two int8
+    weight streams, dequant + integer activation in the epilogue) —
+    bit-identical to the unfused two-linear composition.  Float path: the
+    ``ops.gated_mlp`` entry (exact unfused composition on the jnp backend,
+    the f32-accumulating fused kernel on pallas).
+    """
+    w_in, w_gate = params["w_in"], params["w_gate"]
+    if mode.integer and isinstance(w_in, dict):
+        up_q, gate_q = w_in["w_q"], w_gate["w_q"]
+        if hint:
+            up_q = shard_hint(up_q, None, "tp")
+            gate_q = shard_hint(gate_q, None, "tp")
+        return linear_gated_w8a8(x, up_q, w_in["scale"], gate_q,
+                                 w_gate["scale"], cfg.activation,
+                                 compute_dtype=mode.compute_dtype)
+    if not mode.integer and not isinstance(w_in, dict):
+        wu = w_in.astype(mode.compute_dtype)
+        wg = w_gate.astype(mode.compute_dtype)
+        if hint:
+            wu = shard_hint(wu, None, "tp")
+            wg = shard_hint(wg, None, "tp")
+        return ops.gated_mlp(x, wu, wg, cfg.activation, mode.compute_dtype)
+    # mixed corners (PTQ'd params under a float mode, or integer mode over
+    # float params): the unfused composition keeps each piece's semantics
+    use = (None, "tp") if hint else None
+    h = apply_linear(x, w_in, mode, use_hint=use)
+    g = apply_linear(x, w_gate, mode, use_hint=use)
+    return activation(g, cfg.activation, mode) * h
+
+
 def mlp(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Array:
-    if ("w_gate" not in params and cfg.activation == "gelu"
-            and mode.integer and isinstance(params["w_in"], dict)):
+    if "w_gate" in params:
+        h = gated_ffn_hidden(params, x, cfg, mode, hint=True)
+    elif (cfg.activation == "gelu" and mode.integer
+            and isinstance(params["w_in"], dict)):
         # fused up-projection + integer GELU: the GEMM epilogue requantizes
         # and applies the GELU polynomial in-register (bit-identical to the
         # unfused linear -> activation composition)
@@ -39,11 +78,7 @@ def mlp(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Arra
                              compute_dtype=mode.compute_dtype)
     else:
         h = apply_linear(x, params["w_in"], mode, use_hint=(None, "tp"))
-        if "w_gate" in params:
-            g = apply_linear(x, params["w_gate"], mode, use_hint=(None, "tp"))
-            h = activation(g, cfg.activation, mode) * h
-        else:
-            h = activation(h, cfg.activation, mode)
+        h = activation(h, cfg.activation, mode)
     h = shard_hint(h, "dp", None, "tp")  # hidden: TP region, seq gathered
     out = apply_linear(h, params["w_out"], mode, use_hint=("tp", None))
     return shard_hint(out, "dp", "sp", None)

@@ -17,10 +17,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core import costmodel
 from ..dist.sharding import shard_hint
+from ..kernels import autotune
 from .config import ArchConfig
-from .layers import ExecMode, activation, apply_linear, dense_init
-from .mlp import init_mlp_params, mlp
+from .layers import ExecMode, apply_linear, dense_init
+from .mlp import gated_ffn_hidden, init_mlp_params, mlp
 
 F32 = jnp.float32
 
@@ -43,7 +45,21 @@ def init_moe_params(key, cfg: ArchConfig) -> dict:
     return p
 
 
-MOE_GROUP_SIZE = 2048  # GShard group: bounds the one-hot dispatch tensor
+def _group_size(cfg: ArchConfig, t: int) -> int:
+    """Tokens per GShard dispatch group, from the capacity-bounded
+    all-to-all cost model (table-then-measure via ``autotune``): the
+    one-hot dispatch footprint, per-group all-to-all latency, and capacity
+    rounding waste trade off per (T, d_model, d_ff, E, k, cf) — no more
+    one-size-fits-all constant."""
+    ff = cfg.moe_d_ff or cfg.d_ff
+    sg = autotune.moe_group_size(t, cfg.d_model, ff, cfg.n_experts,
+                                 cfg.n_experts_per_tok, cfg.capacity_factor)
+    sg = min(sg, t)
+    # the tuner's table candidates already divide t; this demotion only
+    # guards measured-cache overrides recorded at a different token count
+    while t % sg:
+        sg //= 2
+    return max(sg, 1)
 
 
 def _dispatch_combine(probs: jax.Array, k: int, capacity: int):
@@ -73,13 +89,11 @@ def moe(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Arra
     # group tokens (GShard): the dispatch one-hot is (G, S, E, C) with S
     # bounded, so its footprint is linear in T, and groups align with the
     # data shards (row-major reshape keeps batch-major order)
-    sg = min(MOE_GROUP_SIZE, t)
-    while t % sg:
-        sg //= 2
+    sg = _group_size(cfg, t)
     g = t // sg
     xg = x.reshape(g, sg, d)
     xg = shard_hint(xg, "dp", None, None)
-    capacity = min(max(int(cfg.capacity_factor * sg * k / e), 4), sg)
+    capacity = costmodel.moe_capacity(sg, e, k, cfg.capacity_factor)
 
     logits = apply_linear(xg.astype(F32), params["router"]["w"],
                           ExecMode("bf16", F32))            # fp32 router
@@ -91,9 +105,10 @@ def moe(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Arra
     xe = shard_hint(xe, "ep", "dp", None, None)
 
     def expert_ffn(p, xe_):                                 # xe_ (G, C, D)
-        h = apply_linear(xe_, p["w_in"], mode)
-        g_ = apply_linear(xe_, p["w_gate"], mode)
-        h = activation(g_, cfg.activation, mode) * h
+        # experts share the dense gated-MLP datapath: on the integer path
+        # each expert's up+gate projections run as ONE fused dual-GEMM over
+        # its (G, C, D) dispatch group
+        h = gated_ffn_hidden(p, xe_, cfg, mode)
         return apply_linear(h, p["w_out"], mode)
 
     ye = jax.vmap(expert_ffn, in_axes=(0, 0))(params["experts"], xe)

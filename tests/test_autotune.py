@@ -113,6 +113,67 @@ class TestTileLegality:
             bm = autotune.rowwise_blocks(m, 2048)
             assert bm % 8 == 0
 
+    def test_gated_mlp_blocks_legal_for_config_shapes(self):
+        """The gatedmlp family returns MXU-legal, VMEM-feasible tiles at
+        the gated archs' (tokens, d_model, d_ff) shapes."""
+        from repro.core.costmodel import gated_mlp_tile_cost
+        for arch in ("codeqwen1.5-7b", "yi-34b", "mixtral-8x7b"):
+            cfg = get_config(arch)
+            m, k, n = 4 * 128, cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+            bm, bn, bk = autotune.gated_mlp_blocks(m, k, n)
+            assert autotune.is_mxu_legal(bm, bn, bk), (arch, bm, bn, bk)
+            assert gated_mlp_tile_cost(m, k, n, bm, bn, bk) < float("inf")
+
+    def test_gated_mlp_vmem_wall_accounts_both_accumulators(self):
+        """The dual-GEMM holds TWO weight streams and TWO accumulators: its
+        chosen tile must fit that working set, not the single-GEMM one."""
+        from repro.core.costmodel import TPU_VMEM_BYTES
+        bm, bn, bk = autotune.gated_mlp_blocks(4096, 8192, 28672)
+        assert (2 * (bm * bk + 2 * bk * bn) + 2 * bm * bn * 4
+                + bm * bn * 2) <= TPU_VMEM_BYTES
+
+    def test_gated_mlp_measured_override(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "measured.json"))
+        autotune.reset_measured_cache()
+        autotune.record("gatedmlp/256x512x512/int8/pallas",
+                        (8, 128, 128), 1.0)
+        autotune.reset_measured_cache()
+        assert autotune.gated_mlp_blocks(256, 512, 512) == (8, 128, 128)
+
+
+class TestMoEGroupSize:
+    """Capacity-bounded all-to-all cost model -> config-driven group size
+    (replaces the MOE_GROUP_SIZE = 2048 constant)."""
+
+    def test_returns_candidate_bounded_by_tokens(self):
+        for t in (32, 512, 8192, 131072):
+            sg = autotune.moe_group_size(t, 4096, 14336, 8, 2, 1.25)
+            assert sg <= t
+            assert sg in autotune._MOE_GROUP_CANDIDATES or sg == t
+
+    def test_wider_expert_fanout_prefers_smaller_groups(self):
+        """More experts blow up the (G, S, E, C) one-hot footprint, so the
+        tuner must not pick LARGER groups for wider expert counts."""
+        few = autotune.moe_group_size(131072, 2048, 1408, 8, 2, 1.25)
+        many = autotune.moe_group_size(131072, 2048, 1408, 60, 4, 1.25)
+        assert many <= few
+
+    def test_measured_override(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "measured.json"))
+        autotune.reset_measured_cache()
+        autotune.record("moe/8192x4096x14336/8x2x1.25", (1024,), 1.0)
+        autotune.reset_measured_cache()
+        assert autotune.moe_group_size(8192, 4096, 14336, 8, 2, 1.25) == 1024
+
+    def test_capacity_formula_matches_model(self):
+        from repro.core.costmodel import moe_capacity
+        for sg, e, k, cf in [(2048, 8, 2, 1.25), (64, 60, 4, 1.25),
+                             (8, 4, 2, 1.0)]:
+            assert moe_capacity(sg, e, k, cf) == min(
+                max(int(cf * sg * k / e), 4), sg)
+
 
 class TestMeasuredCache:
     def test_measured_entry_overrides_table(self, tmp_path, monkeypatch):
@@ -199,6 +260,50 @@ class TestFusedEpilogues:
         assert (ops.gemm_w8a8(xq, xs, w, ws) == plain_ref).all()
         assert (ops.gemm_w8a8(xq, xs, w, ws, residual=resf) == add_ref).all()
         assert (ops.gemm_w8a8(xq, xs, w, ws, gelu_scale=s0) == gelu_ref).all()
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("act", ["silu", "gelu"])
+    def test_gated_mlp_dual_gemm_bit_identical(self, rng, backend, act):
+        """The last matrix row: dual-GEMM dequant + activation(gate) * up
+        == the unfused two-GEMM composition, bit for bit."""
+        xf = jnp.asarray(rng.normal(size=(11, 96)), jnp.float32)
+        wu = jnp.asarray(rng.integers(-127, 128, (96, 72)), jnp.int8)
+        wg = jnp.asarray(rng.integers(-127, 128, (96, 72)), jnp.int8)
+        us = jnp.asarray(np.abs(rng.normal(size=(72,))) + 0.01, jnp.float32)
+        gs = jnp.asarray(np.abs(rng.normal(size=(72,))) + 0.01, jnp.float32)
+        s0 = 8.0 / 127.0
+        ops.set_backend("jnp")
+        xq, xs = ops.quant_rows(xf)
+        unfused_ref = ref.gated_mlp_w8a8_ref(xq, xs, wu, us, wg, gs,
+                                             act=act, act_scale=s0)
+        ops.set_backend(backend)
+        fused = ops.gated_mlp_w8a8(xq, xs, wu, us, wg, gs, act=act,
+                                   act_scale=s0)
+        assert (np.asarray(fused, np.float32)
+                == np.asarray(unfused_ref, np.float32)).all()
+
+    def test_model_gated_path_matches_unfused_forward(self, rng):
+        """End-to-end: ``linear_gated_w8a8`` (the model's fused SwiGLU/GeGLU
+        hidden) == linear_w8a8 x2 -> integer activation -> multiply, on
+        both backends' dispatch decisions."""
+        from repro.models.layers import (
+            ExecMode, activation, linear_gated_w8a8, linear_w8a8)
+        mode = ExecMode("w8a8")
+        x = jnp.asarray(rng.normal(size=(5, 64)), jnp.bfloat16)
+        wu = jnp.asarray(rng.integers(-127, 128, (64, 128)), jnp.int8)
+        wg = jnp.asarray(rng.integers(-127, 128, (64, 128)), jnp.int8)
+        us = jnp.asarray(np.abs(rng.normal(size=(128,))) + 0.01, jnp.float32)
+        gs = jnp.asarray(np.abs(rng.normal(size=(128,))) + 0.01, jnp.float32)
+        for act in ("silu", "gelu"):
+            ops.set_backend("jnp")
+            unfused = (activation(linear_w8a8(x, wg, gs), act, mode)
+                       * linear_w8a8(x, wu, us))
+            for backend in ("jnp", "pallas"):
+                ops.set_backend(backend)
+                fused = linear_gated_w8a8(x, wu, us, wg, gs, act)
+                assert (np.asarray(fused, np.float32)
+                        == np.asarray(unfused, np.float32)).all(), (
+                    act, backend)
 
     def test_model_fused_paths_match_unfused_forward(self, rng):
         """End-to-end: the integer MLP/attention fusions leave the w8a8

@@ -83,6 +83,83 @@ class TestIntGelu:
         assert (ops.gelu_i8(x, 0.05) == ref.int_gelu_ref(x, 0.05)).all()
 
 
+class TestIntSilu:
+    @pytest.mark.parametrize("shape", [(7, 100), (8, 128), (3, 5, 64)])
+    @pytest.mark.parametrize("scale", [8.0 / 127.0, 0.05])
+    def test_exact_vs_ref(self, rng, shape, scale):
+        x = jnp.asarray(rng.integers(-127, 128, shape), jnp.int32)
+        got = ops.silu_i8(x, scale)
+        assert got.dtype == jnp.int32
+        assert (got == ref.int_silu_ref(x, scale)).all()
+
+    def test_close_to_float_silu(self, rng):
+        """Dequantized integer SiLU tracks float SiLU over the clip range."""
+        s = 8.0 / 127.0
+        q = jnp.arange(-128, 128, dtype=jnp.int32)[None, :]
+        got = np.asarray(ops.silu_i8(q, s), np.float64) * (s / 127.0)
+        want = np.asarray(jax.nn.silu(q.astype(jnp.float32) * s), np.float64)
+        assert np.abs(got - want).max() < 0.05
+
+
+class TestDualGemmGatedMLP:
+    """Fused dual-GEMM gated MLP (SwiGLU/GeGLU): BIT-EXACT against the
+    unfused jnp composition oracle for the W8A8 variant, tolerance vs the
+    dense float oracle for the bf16 variant."""
+
+    def _w8a8_inputs(self, rng, m, k, n):
+        xf = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        wu = _rand_i8(rng, (k, n))
+        wg = _rand_i8(rng, (k, n))
+        us = jnp.asarray(np.abs(rng.normal(size=(n,))) + 0.01, jnp.float32)
+        gs = jnp.asarray(np.abs(rng.normal(size=(n,))) + 0.01, jnp.float32)
+        ops.set_backend("jnp")
+        xq, xs = ops.quant_rows(xf)
+        ops.set_backend("pallas")
+        return xq, xs, wu, us, wg, gs
+
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 16, 8), (37, 200, 130), (64, 384, 256), (128, 128, 128),
+    ])
+    @pytest.mark.parametrize("act", ["silu", "gelu"])
+    def test_w8a8_exact_vs_ref(self, rng, m, k, n, act):
+        s = 8.0 / 127.0
+        xq, xs, wu, us, wg, gs = self._w8a8_inputs(rng, m, k, n)
+        want = ref.gated_mlp_w8a8_ref(xq, xs.reshape(-1, 1), wu, us, wg, gs,
+                                      act=act, act_scale=s)
+        got = ops.gated_mlp_w8a8(xq, xs, wu, us, wg, gs, act=act,
+                                 act_scale=s)
+        assert got.dtype == jnp.bfloat16
+        assert (np.asarray(got, np.float32)
+                == np.asarray(want, np.float32)).all()
+
+    @pytest.mark.parametrize("act", ["silu", "gelu"])
+    def test_w8a8_batched_lead_dims(self, rng, act):
+        s = 8.0 / 127.0
+        xq, xs, wu, us, wg, gs = self._w8a8_inputs(rng, 6, 40, 24)
+        want = ops.gated_mlp_w8a8(xq, xs, wu, us, wg, gs, act=act,
+                                  act_scale=s)
+        got = ops.gated_mlp_w8a8(xq.reshape(2, 3, 40), xs.reshape(2, 3, 1),
+                                 wu, us, wg, gs, act=act, act_scale=s)
+        assert got.shape == (2, 3, 24)
+        assert (np.asarray(got, np.float32)
+                == np.asarray(want.reshape(2, 3, 24), np.float32)).all()
+
+    @pytest.mark.parametrize("m,k,n", [(5, 64, 128), (33, 100, 72)])
+    @pytest.mark.parametrize("act", ["silu", "gelu"])
+    def test_bf16_close_vs_dense_oracle(self, rng, m, k, n, act):
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        wu = jnp.asarray(rng.normal(size=(k, n)) * 0.1, jnp.float32)
+        wg = jnp.asarray(rng.normal(size=(k, n)) * 0.1, jnp.float32)
+        got = np.asarray(ops.gated_mlp(x, wu, wg, act), np.float32)
+        h = x @ wu
+        g = x @ wg
+        a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(
+            g, approximate=False)
+        want = np.asarray(a * h, np.float32)
+        scale = max(np.abs(want).max(), 1e-6)
+        assert np.abs(got - want).max() / scale < 0.03  # bf16 granularity
+
+
 class TestQuantize:
     def test_rows_exact(self, rng):
         x = jnp.asarray(rng.normal(size=(6, 200)), jnp.float32)
