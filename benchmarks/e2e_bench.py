@@ -133,6 +133,88 @@ def _serve_bench(arch: str, precision: str, mode: str,
             f"decode_share={share:.0f}%;budget_fill={fill:.0f}%")
 
 
+def _drain_pair(mk_engine, submit, reps=3):
+    """Interleaved min-of-N paged-vs-dense drain timing.
+
+    Both engines serve IDENTICAL traffic (greedy scheduler => identical
+    step sequences) via kernel_bench._time_pair — alternating the two
+    sides exposes them to the same machine load, and the warm calls double
+    as compile + prefix-registration rounds, so the paged side is timed in
+    its steady state (radix tree populated, later drains hit it).
+    Returns (us_paged, us_dense, tokens_per_drain, paged_stats)."""
+    from benchmarks.kernel_bench import _time_pair
+
+    engines = {True: mk_engine(True), False: mk_engine(False)}
+    tokens = {}
+
+    def drain(paged):
+        eng = engines[paged]
+        eng.reset_stats()
+        submit(eng)
+        done = eng.run_until_drained()
+        tokens[paged] = sum(len(r["tokens"]) for r in done)
+        eng.finished.clear()
+
+    us_p, us_d = _time_pair(lambda: drain(True), lambda: drain(False),
+                            reps=reps)
+    assert tokens[True] == tokens[False], tokens
+    return us_p, us_d, tokens[True], engines[True].pool.stats
+
+
+def _serve_prefix_bench(arch: str, precision: str) -> list[tuple]:
+    """Shared-prefix workload: 8 requests whose prompts share a common
+    3/4-length prefix (system-prompt traffic).  The paged engine maps the
+    registered prefix pages and skips prefill for the shared span; the
+    dense engine recomputes it per request — `_paged` must beat `_dense`."""
+    cfg = get_config(arch, precision=precision, reduced=True)
+    params = _serve_params(arch, precision)
+    rng = np.random.default_rng(11)
+    n_req, total, pre = 8, 48, 36              # prefix = 3/4 of the prompt
+    prefix = rng.integers(2, cfg.vocab_size, size=pre).tolist()
+    tails = [rng.integers(2, cfg.vocab_size, size=total - pre).tolist()
+             for _ in range(n_req)]
+
+    def mk(paged):
+        return ServingEngine(params, cfg, ServeConfig(
+            batch_lanes=2, max_seq=64, int8_kv=(precision == "w8a8"),
+            token_budget=32, paged=paged))
+
+    def submit(eng):
+        for i, tail in enumerate(tails):
+            eng.submit(prefix + tail, max_new=3, request_id=i)
+
+    us_p, us_d, toks, st = _drain_pair(mk, submit)
+    derived = (f"requests={n_req};prompt={total};prefix={pre};"
+               f"prefix_hit_tokens={st['prefix_hit_tokens']};"
+               f"vs_dense={us_d / max(us_p, 1e-9):.2f}x")
+    name = f"e2e/serve_prefix_{arch}-reduced_{precision}"
+    return [(f"{name}_paged", us_p / max(toks, 1), derived),
+            (f"{name}_dense", us_d / max(toks, 1),
+             f"requests={n_req};prompt={total};prefix={pre}")]
+
+
+def _serve_mixed_paged_bench(arch: str, precision: str) -> list[tuple]:
+    """The `_serve_bench` mixed traffic through the paged engine, timed
+    pairwise against a dense packed engine: tracks the pure page-gather
+    overhead when there is NO prefix sharing to win back (prompts are
+    random).  No ordering gate — the win case is `e2e/serve_prefix_*`."""
+    cfg = get_config(arch, precision=precision, reduced=True)
+    params = _serve_params(arch, precision)
+    budget, _ = _SERVE_MODES["packed"]
+
+    def mk(paged):
+        return ServingEngine(params, cfg, ServeConfig(
+            batch_lanes=4, max_seq=128, int8_kv=(precision == "w8a8"),
+            token_budget=budget, paged=paged))
+
+    us_p, us_d, toks, st = _drain_pair(
+        mk, lambda eng: _serve_traffic(eng, 6, cfg.vocab_size))
+    return [(f"e2e/serve_mixed_{arch}-reduced_{precision}_paged",
+             us_p / max(toks, 1),
+             f"tok_s={toks / us_p * 1e6:.1f};requests=6;"
+             f"vs_dense_packed={us_d / max(us_p, 1e-9):.2f}x")]
+
+
 def run(smoke: bool = False) -> list[tuple]:
     reps = 1 if smoke else 3
     rows = [
@@ -146,6 +228,10 @@ def run(smoke: bool = False) -> list[tuple]:
         _serve_bench("codeqwen1.5-7b", "w8a8", "chunked"),
         _serve_bench("codeqwen1.5-7b", "w8a8", "packed"),
     ]
+    rows += _serve_prefix_bench("codeqwen1.5-7b", "bf16")
+    rows += _serve_prefix_bench("codeqwen1.5-7b", "w8a8")
+    rows += _serve_mixed_paged_bench("codeqwen1.5-7b", "bf16")
+    rows += _serve_mixed_paged_bench("codeqwen1.5-7b", "w8a8")
     if not smoke:
         rows.insert(1, _train_bench("mixtral-8x7b"))
     # roofline summary (if the dry-run artifacts exist)

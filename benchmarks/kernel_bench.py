@@ -122,6 +122,7 @@ def _run_rows(small: bool, reps: int, backend: str,
         ("int8_attention", lambda: _int8_attn_family(
             reps, backend, [128] if small else [128, 256])),
         ("int8_kv_decode", lambda: _decode_family(reps, backend)),
+        ("paged_decode", lambda: _paged_family(reps, backend)),
     ]
     rows = []
     for name, build in families:
@@ -319,12 +320,277 @@ def _decode_family(reps, backend):
              f"cache_bytes={2*2*sd*hkv*d}")]
 
 
+def _paged_inputs(rng, npg=17, ps=16, b=2, hkv=2, d=64):
+    """Fixed-seed paged arena + full per-lane page chains (page 0 null)."""
+    mp = (npg - 1) // b
+    pk = jnp.asarray(rng.integers(-127, 128, (npg, ps, hkv, d)), jnp.int8)
+    pv = jnp.asarray(rng.integers(-127, 128, (npg, ps, hkv, d)), jnp.int8)
+    pks = jnp.asarray(np.abs(rng.normal(size=(npg, ps, hkv, 1))) + 1e-3,
+                      jnp.float32)
+    pvs = jnp.asarray(np.abs(rng.normal(size=(npg, ps, hkv, 1))) + 1e-3,
+                      jnp.float32)
+    ppos = np.zeros((npg, ps), np.int32)
+    pt = np.zeros((b, mp), np.int32)
+    for lane in range(b):
+        for j in range(mp):
+            pid = 1 + lane * mp + j
+            pt[lane, j] = pid
+            ppos[pid] = np.arange(j * ps, (j + 1) * ps)
+    ppos[0] = -1
+    qpos = jnp.full((b,), mp * ps - 1, jnp.int32)
+    return (pk, pks, pv, pvs, jnp.asarray(ppos), jnp.asarray(pt), qpos), mp
+
+
+def _paged_family(reps, backend):
+    """Paged decode attention (gather through the page table) next to the
+    dense-span decode row above — the delta is the gather indirection."""
+    rng = np.random.default_rng(SEED)
+    ps, hq, d = 16, 8, 64
+    args, mp = _paged_inputs(rng, ps=ps, d=d)
+    qd = jnp.asarray(rng.normal(size=(2, hq, d)), jnp.float32)
+    us = _time(lambda *a: ops.paged_attention_decode(*a), qd, *args,
+               reps=reps)
+    return [(f"kernel/paged_decode_{mp}x{ps}/{backend}", us,
+             f"pages={mp};page_slots={ps};cache_bytes={2*2*mp*ps*2*d}")]
+
+
+# ---------------------------------------------------------------------------
+# measured-cache sweep runner (`--sweep`)
+# ---------------------------------------------------------------------------
+
+
+def _sweep_timer(fn):
+    """One timed call after a warm call — interpret-mode Pallas is slow
+    enough that relative candidate ordering is stable at a single rep; on
+    a real TPU (set_interpret(False)) raise reps in the loop below."""
+    def timer(blocks):
+        f = lambda: fn(*blocks)
+        jax.block_until_ready(f())
+        t0 = time.perf_counter()
+        jax.block_until_ready(f())
+        return (time.perf_counter() - t0) * 1e6
+
+    return timer
+
+
+def sweep(backend: str = "pallas", families: tuple[str, ...] = (),
+          reps: int = 1) -> list[str]:
+    """Populate the measured cache for every tracked autotune key family.
+
+    For each family, times the REAL kernel (or, for the packed/paged
+    serving families, the XLA cache-backed attention those block sizes
+    actually drive) over the same candidate lattice the cost model scores,
+    at the bench shapes, and records the fastest blocks under the exact
+    lookup key via ``autotune.measure`` — written to
+    ``autotune.cache_path()`` (``REPRO_AUTOTUNE_CACHE`` overridable), the
+    JSON every ``ops.py`` entry point consults before the cost table.
+
+    On a real TPU run with ``set_interpret(False)`` first (deployments do)
+    and the numbers are hardware truth; on CPU the kernel families run
+    interpret-mode Pallas — functionally exact, useful for exercising the
+    loop, not for real tile choices.  Returns the recorded keys.
+    """
+    from repro.kernels import autotune
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.int8_flash_attention import int8_flash_attention
+    from repro.kernels.int8_gemm import dual_gemm_gated, int8_gemm
+    from repro.kernels.int8_kv_decode_attention import int8_kv_decode_attention
+    from repro.kernels.int_softmax import int_softmax
+    from repro.kernels.autotune import _divisor_tiles
+    from repro.kernels.common import pad_to
+    from repro.models.attention import _read_paged, _sdpa
+
+    rng = np.random.default_rng(SEED)
+    entries = []
+
+    def gemm_cands(m, k, n):
+        up = lambda x, a: -(-x // a) * a
+        return [(bm, bn, bk)
+                for bm in autotune._GEMM_BMS if bm <= max(up(m, 8), 8)
+                for bn in autotune._GEMM_BNS if bn <= max(up(n, 128), 128)
+                for bk in autotune._GEMM_BKS if bk <= max(up(k, 128), 128)]
+
+    # GEMM + dual-GEMM gated MLP at the bench shape
+    m, k, n = 64, 256, 256
+    x8 = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    w8 = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    w8b = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    entries.append((
+        f"gemm/{m}x{k}x{n}/int8/{backend}", gemm_cands(m, k, n),
+        _sweep_timer(lambda bm, bn, bk: int8_gemm(
+            pad_to(x8, (bm, bk)), pad_to(w8, (bk, bn)),
+            bm=bm, bn=bn, bk=bk))))
+    entries.append((
+        f"gatedmlp/{m}x{k}x{n}/int8/{backend}", gemm_cands(m, k, n),
+        _sweep_timer(lambda bm, bn, bk: dual_gemm_gated(
+            pad_to(x8, (bm, bk)), pad_to(w8, (bk, bn)),
+            pad_to(w8b, (bk, bn)), act="silu", out_dtype=jnp.int32,
+            bm=bm, bn=bn, bk=bk))))
+
+    # flash attention + PV-dequant variant
+    s, d = 64, 64
+    qf = jnp.asarray(rng.normal(size=(1, 2, s, d)), jnp.float32)
+    attn_cands = [(bq, bk) for bq in _divisor_tiles(s)
+                  for bk in _divisor_tiles(s)]
+    entries.append((
+        f"attn/{s}x{s}x{d}/bf16/{backend}", attn_cands,
+        _sweep_timer(lambda bq, bk: flash_attention(
+            qf, qf, qf, causal=True, bq=bq, bk=bk))))
+    qi = jnp.asarray(rng.integers(-127, 128, (1, 2, s, d)), jnp.int8)
+    vsc = jnp.asarray(np.abs(rng.normal(size=(1, 2, s, 1))) + 1e-3,
+                      jnp.float32)
+    entries.append((
+        f"attnpv/{s}x{s}x{d}/int8/{backend}", attn_cands,
+        _sweep_timer(lambda bq, bk: int8_flash_attention(
+            qi, qi, qi, 0.002, v_scale=vsc, bq=bq, bk=bk))))
+
+    # int8-KV decode (dense span) — key family has no backend suffix
+    sd, hq, hkv = 128, 8, 2
+    qd = jnp.asarray(rng.normal(size=(2, hq, d)), jnp.float32)
+    kq = jnp.asarray(rng.integers(-127, 128, (2, sd, hkv, d)), jnp.int8)
+    ksc = jnp.asarray(np.abs(rng.normal(size=(2, sd, hkv, 1))) + 1e-3,
+                      jnp.float32)
+    dpos = jnp.asarray(np.tile(np.arange(sd), (2, 1)), jnp.int32)
+    dqpos = jnp.full((2,), sd - 1, jnp.int32)
+    g = hq // hkv
+    entries.append((
+        f"decode/{sd}x{d}x{g}",
+        [(bk,) for bk in _divisor_tiles(sd, cap=2048)],
+        _sweep_timer(lambda bk: int8_kv_decode_attention(
+            qd, kq, ksc, kq, ksc, dpos, dqpos, bk=bk))))
+
+    # row-wise (softmax representative for the family)
+    rs, cs = 16, 256
+    xs = jnp.asarray(rng.integers(-127, 128, (rs, cs)), jnp.int32)
+    entries.append((
+        f"rowwise/{rs}x{cs}/int32", [(bm,) for bm in (8, 16, 32, 64, 128)],
+        _sweep_timer(lambda bm: int_softmax(
+            pad_to(xs, (bm, 1)), 0.05, bm=bm))))
+
+    # packed + paged serving families: their blocks drive the XLA
+    # cache-backed attention (models/attention.py), so that is what the
+    # timer runs — recorded under this backend's key because the lookup is
+    # keyed on ops.backend() regardless of which path executes.  Shapes
+    # and arch mirror the e2e serve bench (codeqwen reduced, max_seq 128,
+    # mid budget bucket), so the recorded keys are EXACTLY what a serving
+    # forward looks up — not a synthetic shape no lookup can hit.
+    from repro.configs import get_config
+    serve_cfg = get_config("codeqwen1.5-7b", reduced=True)
+    serve_arch, d_serve = serve_cfg.name, serve_cfg.head_dim
+    t_b, skv, ps = 8, 128, 16
+    b_l = 2
+    qp = jnp.asarray(rng.normal(size=(b_l, t_b, 4, d_serve)), jnp.bfloat16)
+    kc = jnp.asarray(rng.normal(size=(b_l, skv, 2, d_serve)), jnp.bfloat16)
+    qpp = jnp.asarray(np.tile(np.arange(skv - t_b, skv), (b_l, 1)),
+                      jnp.int32)
+    kpp = jnp.asarray(np.tile(np.arange(skv), (b_l, 1)), jnp.int32)
+    sdpa = jax.jit(lambda chunk: _sdpa(
+        qp, kc, kc, qpp, kpp, 0.125, jnp.bfloat16, causal=True,
+        valid=kpp >= 0, chunk=chunk), static_argnums=0)
+    entries.append((
+        f"packed/{t_b}x{skv}x{d_serve}/{serve_arch}/{backend}",
+        [(bq, skv) for bq in _divisor_tiles(t_b)],
+        _sweep_timer(lambda bq, bk: sdpa(max(bq, 1)))))
+
+    from repro.models.attention import init_paged_cache
+    npg = b_l * (skv // ps) + 1
+    cache = init_paged_cache(serve_cfg, b_l, npg, ps, skv // ps, int8=False)
+    cache["pt"] = jnp.asarray(
+        np.arange(1, npg, dtype=np.int32).reshape(b_l, -1))
+    cache["ppos"] = jnp.asarray(np.concatenate(
+        [np.full((1, ps), -1, np.int32)]
+        + [np.arange(j * ps, (j + 1) * ps, dtype=np.int32).reshape(1, ps)
+           for _ in range(b_l) for j in range(skv // ps)]))
+
+    def paged_path(chunk):
+        kv, vv, kpos = _read_paged(cache, jnp.bfloat16)
+        return _sdpa(qp, kv, vv, qpp, kpos, 0.125, jnp.bfloat16,
+                     causal=True, valid=kpos >= 0, chunk=chunk)
+
+    paged_jit = jax.jit(paged_path, static_argnums=0)
+    # the XLA gather path consumes only the query chunk (bq); keep the
+    # table's KV block in the recorded entry rather than sweeping noise
+    _, bk_tab = autotune.paged_blocks(t_b, ps, skv, d_serve,
+                                      arch=serve_arch, backend=backend)
+    entries.append((
+        f"paged/{t_b}x{ps}x{d_serve}/{serve_arch}/{backend}",
+        [(bq, bk_tab) for bq in _divisor_tiles(t_b)],
+        _sweep_timer(lambda bq, bk: paged_jit(max(bq, 1)))))
+
+    # MoE group size: time the real gshard forward per candidate group by
+    # steering the in-process measured-cache view, then record the winner
+    import repro.kernels.autotune as at
+    from repro.configs import get_config
+    from repro.models.moe import init_moe_params, moe
+    from repro.models.lm import exec_mode
+    mcfg = get_config("mixtral-8x7b", reduced=True)
+    mp_ = init_moe_params(jax.random.PRNGKey(SEED), mcfg)
+    xt = jnp.asarray(rng.normal(size=(2, 64, mcfg.d_model)), jnp.bfloat16)
+    t_tok = int(np.prod(xt.shape[:2]))
+    ff = mcfg.moe_d_ff or mcfg.d_ff
+    moe_key = (f"moe/{t_tok}x{mcfg.d_model}x{ff}/"
+               f"{mcfg.n_experts}x{mcfg.n_experts_per_tok}x"
+               f"{mcfg.capacity_factor:g}")
+
+    def moe_timer(blocks):
+        at._measured()[moe_key] = {"blocks": [blocks[0]], "us": 0.0}
+        at.moe_group_size.cache_clear()
+        f = jax.jit(lambda a: moe(mp_, a, mcfg, exec_mode(mcfg)))
+        jax.block_until_ready(f(xt))
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(xt))
+        del at._measured()[moe_key]
+        at.moe_group_size.cache_clear()
+        return (time.perf_counter() - t0) * 1e6
+
+    entries.append((
+        moe_key, [(sg,) for sg in (32, 64, 128) if t_tok % sg == 0],
+        moe_timer))
+
+    recorded = []
+    for key, cands, timer in entries:
+        fam = key.split("/", 1)[0]
+        if families and fam not in families:
+            continue
+        best = autotune.measure(key, cands, timer)
+        recorded.append(key)
+        print(f"sweep {key}: best={best} "
+              f"({len(cands)} candidates)", file=sys.stderr)
+    autotune.reset_measured_cache()  # subsequent lookups see the new file
+    return recorded
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
                     help="XLA reference path or interpret-mode Pallas")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sweep", action="store_true",
+                    help="measured-cache sweep: time every tracked autotune"
+                         " key family on --backend and write the fastest "
+                         "blocks to autotune.cache_path()")
+    ap.add_argument("--families", default="",
+                    help="comma list to restrict --sweep (e.g. gemm,attn)")
     args = ap.parse_args()
+    if args.sweep:
+        from repro.kernels import ops as _ops
+        from repro.kernels.common import interpret_mode
+        # NOTE: interpret mode is left AS-IS (CPU default: True) — a real
+        # TPU deployment calls set_interpret(False) at startup and the
+        # sweep must time actual hardware kernels, not force emulation
+        # timings into the production measured cache
+        prev_b = _ops.backend()
+        _ops.set_backend(args.backend)
+        try:
+            fams = tuple(f for f in args.families.split(",") if f)
+            print(f"sweep: backend={args.backend} "
+                  f"interpret={interpret_mode()}", file=sys.stderr)
+            keys = sweep(backend=args.backend, families=fams)
+        finally:
+            _ops.set_backend(prev_b)
+        from repro.kernels import autotune
+        print(f"recorded {len(keys)} keys -> {autotune.cache_path()}")
+        return
     for name, us, derived in run(backend=args.backend, smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}")
 

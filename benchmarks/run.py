@@ -74,6 +74,31 @@ def _write_json(path: str, rows: list[tuple], meta: dict,
     print(f"wrote {path} ({len(entries)} entries)")
 
 
+def _decode_perf_gate(path: str) -> None:
+    """Perf regression gate (ROADMAP): w8a8 decode must stay FASTER than
+    bf16 decode for every arch pair the artifact tracks — the whole point
+    of the int8 serving path.  Reads the final merged artifact so smoke
+    runs gate against the committed trajectory too; prints the headroom
+    (currently ~8x) so regressions are visible before they flip the sign.
+    """
+    with open(os.path.join(REPO_ROOT, path)) as f:
+        entries = json.load(f).get("entries", {})
+    pairs = [(k, k[: -len("_bf16")] + "_w8a8") for k in entries
+             if k.startswith("e2e/decode_") and k.endswith("_bf16")
+             and k[: -len("_bf16")] + "_w8a8" in entries]
+    for bkey, wkey in sorted(pairs):
+        b_us, w_us = entries[bkey]["us"], entries[wkey]["us"]
+        ratio = b_us / max(w_us, 1e-9)
+        print(f"decode gate: {wkey} {w_us}us vs {bkey} {b_us}us "
+              f"({ratio:.1f}x headroom)")
+        if w_us >= b_us:
+            raise SystemExit(
+                f"PERF regression: {wkey} ({w_us}us) is not faster than "
+                f"{bkey} ({b_us}us) — the w8a8 decode path lost its edge")
+    if not pairs:
+        print("decode gate: no decode pairs in artifact (fresh checkout)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -103,6 +128,7 @@ def main() -> None:
     _write_json("BENCH_kernels.json", kernel_rows, meta, smoke=args.smoke,
                 backend=args.backend)
     _write_json("BENCH_e2e.json", e2e_rows, meta, smoke=args.smoke)
+    _decode_perf_gate("BENCH_e2e.json")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verification: full test suite + a ~30 s benchmark smoke that must
 # leave machine-readable perf artifacts at the repo root (run.py fails if
-# BENCH_*.json would lose a previously present key), an examples smoke
-# (quickstart + 4-request packed serving drains: a bf16 one and a SwiGLU
-# w8a8 one exercising the fused dual-GEMM gated-MLP path), a packed-vs-
-# chunked-vs-tokenwise greedy-equivalence smoke, and a doc link check.
+# BENCH_*.json would lose a previously present key, and gates w8a8 decode
+# staying faster than bf16), an examples smoke (quickstart + 4-request
+# packed serving drains: a bf16 one and a SwiGLU w8a8 one exercising the
+# fused dual-GEMM gated-MLP path), a packed-vs-chunked-vs-tokenwise
+# greedy-equivalence smoke, a paged-vs-dense shared-prefix equivalence
+# smoke (bit-identical outputs + nonzero prefix-hit stat), and a doc link
+# check.
 #
 # Usage: scripts/verify.sh
 set -euo pipefail
@@ -39,6 +42,9 @@ PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b --reduced \
 
 echo "== packed/chunked/tokenwise greedy-equivalence smoke =="
 PYTHONPATH=src python scripts/greedy_equiv_smoke.py
+
+echo "== paged-vs-dense shared-prefix equivalence smoke =="
+PYTHONPATH=src python scripts/paged_equiv_smoke.py
 
 echo "== doc link check =="
 python scripts/check_doc_links.py

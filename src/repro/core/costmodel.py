@@ -264,6 +264,40 @@ def packed_attention_tile_cost(t_bucket: int, s_kv: int, d: int, bq: int,
     return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES
 
 
+TPU_PAGE_GATHER_CYCLES = 150   # per-page DMA descriptor/setup overhead: a
+                               # paged KV block is gathered page-by-page
+                               # through the page table instead of streamed
+                               # as one contiguous span
+
+
+def paged_attention_tile_cost(t_bucket: int, s_view: int, page: int, d: int,
+                              bq: int, bk: int, in_bytes: int = 2) -> float:
+    """Estimated cycles for one (batch*head) slice of the paged serving
+    attention: a ``t_bucket``-row query block against an ``s_view``-slot
+    gathered page view (``page``-slot pages).
+
+    The shape matches ``packed_attention_tile_cost`` — short ragged query
+    block, long position-masked cache — but the KV stream is GATHERED:
+    every ``page`` slots of a (bk, D) K/V block start a fresh DMA descriptor
+    (discontiguous physical pages), so each KV block pays a per-page setup
+    cost on top of the stream.  That models the gather-vs-dense-span
+    trade: large bk amortizes grid-step overhead exactly as in the dense
+    table, but its advantage shrinks as bk/page descriptors pile up."""
+    gq, gk = _cdiv(t_bucket, bq), _cdiv(s_view, bk)
+    vmem = ((bq * d + 2 * bk * d) * in_bytes   # q tile + double-buffered k/v
+            + bk * 4                           # per-slot position vector
+            + bq * (bk + 2 * d + 2) * 4)       # scores + acc + m/l columns
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    steps = gq * gk
+    compute = steps * 2 * (bq * bk * d) / TPU_MACS_PER_CYCLE
+    hbm = (gq * (bq * d * in_bytes
+                 + gk * (2 * bk * d * in_bytes + bk * 4))
+           ) / TPU_HBM_BYTES_PER_CYCLE
+    gather = steps * _cdiv(bk, page) * TPU_PAGE_GATHER_CYCLES
+    return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES + gather
+
+
 def rowwise_tile_cost(m: int, n: int, bm: int,
                       in_bytes: int = 4, out_bytes: int = 1) -> float:
     """Estimated cycles for a row-blocked elementwise/reduction kernel

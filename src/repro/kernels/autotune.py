@@ -81,6 +81,7 @@ def reset_measured_cache() -> None:
     attention_blocks.cache_clear()
     attention_pv_blocks.cache_clear()
     packed_blocks.cache_clear()
+    paged_blocks.cache_clear()
     decode_blocks.cache_clear()
     rowwise_blocks.cache_clear()
     moe_group_size.cache_clear()
@@ -276,6 +277,43 @@ def packed_blocks(t_bucket: int, s_kv: int, d: int, arch: str = "",
         for bk in k_tiles:
             c = costmodel.packed_attention_tile_cost(t_bucket, s_kv, d,
                                                      bq, bk)
+            if c < best_cost:
+                best, best_cost = (bq, bk), c
+    if best is None:  # every candidate blew VMEM: take the smallest tiles
+        best = (q_tiles[0], k_tiles[0])
+    return best
+
+
+@functools.lru_cache(maxsize=4096)
+def paged_blocks(t_bucket: int, page: int, s_view: int, d: int,
+                 arch: str = "", backend: str = "pallas") -> tuple[int, int]:
+    """(bq, bk) for the paged serving attention: a ``t_bucket``-row packed
+    batch against an ``s_view``-slot gathered page view (``page``-slot
+    pages).  Its own key family (``paged/{budget}x{page}x{D}``) — the KV
+    stream is a page GATHER rather than a dense-span read, so the per-page
+    descriptor overhead (costmodel.paged_attention_tile_cost) shifts the
+    optimum toward larger page-aligned KV blocks than the ``packed``
+    table would pick.  KV candidates are page-aligned: the kernel gathers
+    whole pages, and a page-straddling block would split a DMA mid-page."""
+    q_tiles = _divisor_tiles(t_bucket)
+    k_tiles = [k for k in _divisor_tiles(s_view) if k % page == 0] or [page]
+    hit = _hit(f"paged/{t_bucket}x{page}x{d}/{arch}/{backend}")
+    if hit:
+        # the persisted key deliberately omits s_view (the family is keyed
+        # on the BUCKET shape); a measurement recorded at one view length
+        # must still satisfy this call's divisibility invariants, so
+        # demote each block to the largest legal tile <= the recorded one
+        bq, bk = hit
+        if t_bucket % bq:
+            bq = max([q for q in q_tiles if q <= bq], default=q_tiles[0])
+        if s_view % bk or bk % page:
+            bk = max([k for k in k_tiles if k <= bk], default=k_tiles[0])
+        return bq, bk
+    best, best_cost = None, float("inf")
+    for bq in q_tiles:
+        for bk in k_tiles:
+            c = costmodel.paged_attention_tile_cost(t_bucket, s_view, page,
+                                                    d, bq, bk)
             if c < best_cost:
                 best, best_cost = (bq, bk), c
     if best is None:  # every candidate blew VMEM: take the smallest tiles

@@ -337,3 +337,19 @@ def decode_attention_int8kv(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
     bk = autotune.decode_blocks(s, d, g)
     return int8_kv_decode_attention(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
                                     scale=scale, window=window, bk=bk)
+
+
+def paged_attention_decode(q, pk, pks, pv, pvs, ppos, pt, qpos,
+                           scale=None, window=0):
+    """Single-token attention over the PAGED KV arena (paged serving hot
+    path): the pallas kernel gathers pages HBM->VMEM through the
+    scalar-prefetched page table and dequantizes in-register; the jnp path
+    materializes the gathered view and runs the dense decode oracle —
+    exactly the math of the dense cache path over the same positions
+    (``pks``/``pvs`` None = bf16 pages)."""
+    if not _use_pallas():
+        return ref.paged_decode_attention_ref(
+            q, pk, pks, pv, pvs, ppos, pt, qpos, scale, window)
+    from .paged_attention import paged_decode_attention
+    return paged_decode_attention(q, pk, pks, pv, pvs, ppos, pt, qpos,
+                                  scale=scale, window=window)

@@ -182,6 +182,32 @@ def int8_kv_decode_attention_ref(q, k_q, k_s, v_q, v_s, pos_ids, qpos,
     return o.reshape(b, hq, d).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, pk, pks, pv, pvs, ppos, pt, qpos,
+                               scale=None, window=0):
+    """Oracle for kernels.paged_attention: gather the per-lane page view
+    through the page table, then dequant-then-attend exactly like the
+    dense decode oracle.  ``pks``/``pvs`` None = bf16 pages (no scales)."""
+    n_pages, ps = ppos.shape
+    ptc = jnp.clip(pt, 0, n_pages - 1)                    # (B, MP)
+    b, mp = ptc.shape
+    hkv, d = pk.shape[2], pk.shape[3]
+    view = lambda a: a[ptc].reshape(b, mp * ps, hkv, -1)
+    ones = jnp.ones((n_pages, ps, hkv, 1), jnp.float32)
+    pos = ppos[ptc].reshape(b, mp * ps)
+    out = int8_kv_decode_attention_ref(
+        q, view(pk), view(pks if pks is not None else ones),
+        view(pv), view(pvs if pvs is not None else ones),
+        pos, qpos, scale=scale, window=window)
+    # lanes with NO valid slot (idle: qpos -1 / all-null table / window
+    # excluded everything) emit exact zeros, matching the kernel, instead
+    # of a masked-uniform mean
+    valid = (pos >= 0) & (pos <= qpos[:, None])
+    if window:
+        valid &= pos > (qpos[:, None] - window)
+    live = jnp.any(valid, axis=1)
+    return jnp.where(live[:, None, None], out, 0)
+
+
 def int8_flash_attention_ref(q, k, v, scale, causal=True, v_scale=None):
     """Bit-exact integer oracle of kernels.int8_flash_attention.
 

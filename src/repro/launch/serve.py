@@ -38,6 +38,11 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="chunked-mode cap when --token-budget is 0 "
                          "(0 = legacy token-at-a-time prompt feed)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool with shared-prefix reuse "
+                         "(docs/serving.md; falls back to dense caches for "
+                         "recurrent/cross-attention archs)")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -57,7 +62,8 @@ def main() -> None:
         ServeConfig(batch_lanes=args.lanes, max_seq=args.max_seq,
                     int8_kv=args.int8_kv, temperature=args.temperature,
                     token_budget=args.token_budget,
-                    prefill_chunk=args.prefill_chunk, seed=args.seed),
+                    prefill_chunk=args.prefill_chunk, seed=args.seed,
+                    paged=args.paged, page_size=args.page_size),
         kv_source=kv_source)
 
     rng = np.random.default_rng(args.seed)
@@ -71,7 +77,8 @@ def main() -> None:
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s, "
           f"int8_kv={args.int8_kv}, precision={precision}, "
-          f"mode={engine.mode}, buckets={engine.chunk_buckets})")
+          f"mode={engine.mode}, paged={engine.paged}, "
+          f"buckets={engine.chunk_buckets})")
     print(engine.stats_summary())
 
 

@@ -79,6 +79,96 @@ def _quant_kv(x: jax.Array):
     return jnp.clip(jnp.round(x.astype(F32) / s), -128, 127).astype(jnp.int8), s
 
 
+def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
+                     page_size: int, pages_per_lane: int, *, int8: bool,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged KV arena: ONE physical pool of ``n_pages`` fixed-size pages
+    shared by every lane, plus the per-lane page table.
+
+        cache = {"pk"/"pv": (n_pages, ps, Hkv, D),          # page payload
+                 "pks"/"pvs": (n_pages, ps, Hkv, 1) f32,    # int8 scales
+                 "ppos": (n_pages, ps) int32,               # -1 = empty slot
+                 "pt":   (B, max_pages) int32}              # page table
+
+    Page 0 is the permanent null page (``serve/kv_pool.py``): unmapped
+    table entries point at it and its ``ppos`` stays -1, so gathers need no
+    validity branch.  Logical page j of a lane covers absolute positions
+    [j*ps, (j+1)*ps); with ps | max_seq the gathered per-lane view is
+    element-for-element the dense ``init_cache`` layout (slot i = position
+    i), which is what makes the paged serving path bit-identical to the
+    dense one."""
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    cache: dict[str, Any] = {
+        "ppos": jnp.full((n_pages, page_size), -1, jnp.int32),
+    }
+    if int8:
+        cache["pk"] = jnp.zeros((n_pages, page_size, hkv, hd), jnp.int8)
+        cache["pv"] = jnp.zeros((n_pages, page_size, hkv, hd), jnp.int8)
+        cache["pks"] = jnp.ones((n_pages, page_size, hkv, 1), F32)
+        cache["pvs"] = jnp.ones((n_pages, page_size, hkv, 1), F32)
+    else:
+        cache["pk"] = jnp.zeros((n_pages, page_size, hkv, hd), dtype)
+        cache["pv"] = jnp.zeros((n_pages, page_size, hkv, hd), dtype)
+    cache["pt"] = jnp.zeros((batch, pages_per_lane), jnp.int32)  # all null
+    return cache
+
+
+def _write_paged(cache: dict, k, v, positions):
+    """Scatter k/v (B,T,Hkv,D) into the page arena through the page table.
+
+    Slot = (page_table[lane, pos // ps], pos % ps).  Pad tokens (position
+    -1) and unmapped/null pages route to an out-of-bounds page index and
+    the scatter drops them (jnp ``.at`` default) — the engine guarantees a
+    lane-owned page backs every real write (kv_pool.ensure_writable), the
+    null-page guard is defense in depth.  There is no full-assign fast
+    path: page granularity keeps every write a scatter."""
+    npg, ps = cache["ppos"].shape
+    pt = cache["pt"]                                        # (B, MP)
+    b, t = positions.shape
+    logical = jnp.clip(jnp.where(positions >= 0, positions // ps, 0),
+                       0, pt.shape[1] - 1)
+    phys = jnp.take_along_axis(pt, logical, axis=1)         # (B, T)
+    phys = jnp.where((positions >= 0) & (phys > 0), phys, npg)  # OOB -> drop
+    slot = jnp.where(positions >= 0, positions % ps, 0)
+    pf, sf = phys.reshape(-1), slot.reshape(-1)
+    cache = dict(cache)
+    if "pks" in cache:
+        k_q, k_s = _quant_kv(k)
+        v_q, v_s = _quant_kv(v)
+        cache["pk"] = cache["pk"].at[pf, sf].set(k_q.reshape(b * t, *k_q.shape[2:]))
+        cache["pv"] = cache["pv"].at[pf, sf].set(v_q.reshape(b * t, *v_q.shape[2:]))
+        cache["pks"] = cache["pks"].at[pf, sf].set(k_s.reshape(b * t, *k_s.shape[2:]))
+        cache["pvs"] = cache["pvs"].at[pf, sf].set(v_s.reshape(b * t, *v_s.shape[2:]))
+    else:
+        cache["pk"] = cache["pk"].at[pf, sf].set(
+            k.astype(cache["pk"].dtype).reshape(b * t, *k.shape[2:]))
+        cache["pv"] = cache["pv"].at[pf, sf].set(
+            v.astype(cache["pv"].dtype).reshape(b * t, *v.shape[2:]))
+    cache["ppos"] = cache["ppos"].at[pf, sf].set(positions.reshape(-1))
+    return cache
+
+
+def _read_paged(cache: dict, dtype):
+    """Gather the per-lane dense view (B, MP*ps, Hkv, D) + positions.
+
+    With ps | max_seq this view is element-for-element what ``_read_cache``
+    returns for the dense cache (null/empty slots carry pos -1 and are
+    masked by position, exactly like dense empty slots), so the attention
+    math downstream is unchanged — paging only changes where the bytes
+    live."""
+    npg, ps = cache["ppos"].shape
+    pt = jnp.clip(cache["pt"], 0, npg - 1)                  # (B, MP)
+    b, mp = pt.shape
+    kpos = cache["ppos"][pt].reshape(b, mp * ps)
+    if "pks" in cache:
+        k = cache["pk"][pt].astype(F32) * cache["pks"][pt]
+        v = cache["pv"][pt].astype(F32) * cache["pvs"][pt]
+    else:
+        k, v = cache["pk"][pt], cache["pv"][pt]
+    shape = (b, mp * ps) + k.shape[3:]
+    return k.astype(dtype).reshape(shape), v.astype(dtype).reshape(shape), kpos
+
+
 def _write_cache(cache: dict, k, v, positions):
     """Write k/v (B,T,Hkv,D) at ring slots positions % S.
 
@@ -308,6 +398,27 @@ def attention(
         # static KV, no mask (all source positions valid)
         kpos = jnp.zeros((b, k.shape[1]), jnp.int32)
         out = _sdpa(q, k, v, positions, kpos, scale, dtype, causal=False)
+    elif cache is not None and "pt" in cache:
+        # paged serving path: scatter through the page table, then either
+        # the gather-based paged decode kernel (all-decode steady state on
+        # the pallas backend, int8 pages) or the XLA gather-then-attend
+        # view — the same _sdpa the dense cache path runs, over a view
+        # that is element-identical to the dense cache (docs/serving.md)
+        cache = _write_paged(cache, k, v, positions)
+        ps = cache["ppos"].shape[1]
+        if "pks" in cache and t == 1 and ops.backend() == "pallas":
+            out = ops.paged_attention_decode(
+                q[:, 0], cache["pk"], cache["pks"], cache["pv"],
+                cache["pvs"], cache["ppos"], cache["pt"], positions[:, 0],
+                scale=scale, window=window)[:, None].astype(dtype)
+        else:
+            kc, vc, kpos = _read_paged(cache, dtype)
+            bq, _ = autotune.paged_blocks(t, ps, kc.shape[1], hd,
+                                          arch=cfg.name,
+                                          backend=ops.backend())
+            out = _sdpa(q, kc, vc, positions, kpos, scale, dtype,
+                        causal=True, window=window, valid=kpos >= 0,
+                        chunk=max(bq, 1))
     elif cache is not None:
         cache = _write_cache(cache, k, v, positions)
         if "k_s" in cache and t == 1 and ops.backend() == "pallas":

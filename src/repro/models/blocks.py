@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import shard_hint
-from .attention import attention, init_attn_params, init_cache
+from .attention import attention, init_attn_params, init_cache, init_paged_cache
 from .config import ArchConfig
 from .layers import ExecMode, apply_norm, norm_params
 from .mlp import init_mlp_params, mlp
@@ -88,7 +88,16 @@ def _cross_len(cfg: ArchConfig) -> int:
 
 
 def init_block_state(kind: str, cfg: ArchConfig, batch: int, max_seq: int,
-                     int8_kv: bool, dtype, window_slack: int = 0) -> dict | None:
+                     int8_kv: bool, dtype, window_slack: int = 0,
+                     paged_pages: int = 0, page_size: int = 0) -> dict | None:
+    if paged_pages and kind in ("attn", "attn_swa", "moe", "moe_swa",
+                                "shared_attn"):
+        # paged serving arena (serve/kv_pool.py owns the page bookkeeping);
+        # window archs use the same arena — masking derives from positions,
+        # the engine caps their LIVE pages at the window instead
+        return {"kv": init_paged_cache(cfg, batch, paged_pages, page_size,
+                                       -(-max_seq // page_size),
+                                       int8=int8_kv, dtype=dtype)}
     if kind in ("xattn", "dec"):
         # cross-attention KV is static per request: precomputed once
         # (models.lm.precompute_cross_states), never per decode step

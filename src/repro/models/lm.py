@@ -72,17 +72,22 @@ def init_params(key, cfg: ArchConfig) -> dict:
 
 def init_states(cfg: ArchConfig, batch: int, max_seq: int,
                 int8_kv: bool = False, dtype=DEFAULT_DTYPE,
-                window_slack: int = 0) -> list:
+                window_slack: int = 0, paged_pages: int = 0,
+                page_size: int = 0) -> list:
     """Stacked per-period states mirroring the params layout.
 
     ``window_slack`` widens sliding-window ring caches by that many slots
     (chunked prefill: a C-token chunk write must not evict keys still
     inside the window of the chunk's earliest query — see docs/serving.md).
+    With ``paged_pages`` > 0, attention KV caches become paged arenas of
+    that many ``page_size``-slot pages plus a per-lane page table
+    (attention.init_paged_cache; the serving engine owns the allocator).
     """
     states = []
     for kind in cfg.block_pattern:
         st = init_block_state(kind, cfg, batch, max_seq, int8_kv, dtype,
-                              window_slack=window_slack)
+                              window_slack=window_slack,
+                              paged_pages=paged_pages, page_size=page_size)
         if st is None:
             states.append(None)
             continue

@@ -6,3 +6,4 @@ from .engine import (  # noqa: F401
     packed_step,
     prefill_step,
 )
+from .kv_pool import PagedKVPool  # noqa: F401

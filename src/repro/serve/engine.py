@@ -52,6 +52,19 @@ the fused int8-KV decode kernel; mixed-depth buckets read the cache
 through the XLA dequant-then-attend path with block sizes from the
 ``packed`` autotune key family (same numerics contract — masking and
 scales from the cache, no approximation; see docs/serving.md).
+
+``paged=True`` replaces the dense per-lane caches with the PAGED KV pool:
+one physical arena of fixed-size pages per attention layer, a per-lane
+page table, and the refcounted allocator + radix prefix index in
+``serve/kv_pool.py``.  Requests whose prompt prefix is already registered
+(same system prompt / few-shot header) map the shared physical pages and
+SKIP PREFILL for the shared span; divergence inside a page copies-on-
+write.  Paging is a memory-layout change only — outputs are bit-identical
+to the dense engine (greedy and sampled, all three schedules; enforced by
+tests/test_system.py and scripts/paged_equiv_smoke.py).  Recurrent-state
+and cross-attention archs keep the dense layout (their per-lane state
+leaves need the lane-masked commit that the shared arena deliberately
+bypasses).
 """
 from __future__ import annotations
 
@@ -63,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import ArchConfig, forward, init_states, precompute_cross_states
+from .kv_pool import PagedKVPool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +89,9 @@ class ServeConfig:
     token_budget: int = 32       # packed-step tokens per iteration; 0 = off
     prefill_chunk: int = 32      # chunked-mode cap (used when budget = 0)
     seed: int = 0                # base of the per-lane PRNG tree
+    paged: bool = False          # paged KV pool + shared-prefix reuse
+    page_size: int = 16          # KV page slots (demoted to divide max_seq)
+    pool_pages: int = 0          # physical pages; 0 = auto-size
 
 
 def packed_step(params, cfg: ArchConfig, tokens, positions, states,
@@ -116,6 +133,49 @@ def _masked_commit(old_states, new_states, lane_mask):
     return jax.tree.map(sel, new_states, old_states)
 
 
+def _paged_states_map(states, fn):
+    """Apply ``fn`` to every paged KV cache dict in the state tree."""
+    out = []
+    for st in states:
+        if isinstance(st, dict) and "kv" in st and "ppos" in st["kv"]:
+            out.append(dict(st, kv=fn(st["kv"])))
+        else:
+            out.append(st)
+    return out
+
+
+def _paged_clear(states, mask):
+    """Reset ``ppos`` to -1 for every page in ``mask`` (n_pages,) bool —
+    a freed page's stale slots must never look valid to its next owner."""
+    def clr(kv):
+        return dict(kv, ppos=jnp.where(mask[None, :, None], -1, kv["ppos"]))
+    return _paged_states_map(states, clr)
+
+
+def _paged_copy(states, src, dst, keep):
+    """Copy page ``src`` into ``dst`` (copy-on-write), keeping the first
+    ``keep`` slots' positions valid and clearing the rest: the source may
+    carry its owner's tokens beyond the shared span."""
+    def cp(kv):
+        kv = dict(kv)
+        for key in ("pk", "pv", "pks", "pvs"):
+            if key in kv:
+                kv[key] = kv[key].at[:, dst].set(kv[key][:, src])
+        ps = kv["ppos"].shape[-1]
+        pos = jnp.where(jnp.arange(ps) < keep, kv["ppos"][:, src], -1)
+        kv["ppos"] = kv["ppos"].at[:, dst].set(pos)
+        return kv
+    return _paged_states_map(states, cp)
+
+
+def _with_page_table(states, pt):
+    """Swap the page-table leaf ((P, B, MP), identical across periods) in
+    every paged cache for the host scheduler's current mapping."""
+    def upd(kv):
+        return dict(kv, pt=jnp.broadcast_to(pt, kv["pt"].shape))
+    return _paged_states_map(states, upd)
+
+
 def _sample(logits, temperature: float, keys):
     """Per-lane sampling: ``keys`` (B, 2) uint32, one PRNG stream per lane."""
     if temperature <= 0.0:
@@ -154,9 +214,36 @@ class ServingEngine:
         # span write must not evict keys still inside the window of the
         # span's earliest query (ring size W serves only C == 1)
         self._window_slack = self._buckets[-1] if self._buckets else 0
-        self.states = init_states(cfg, b, serve_cfg.max_seq,
-                                  int8_kv=serve_cfg.int8_kv,
-                                  window_slack=self._window_slack)
+        self._paged = self._resolve_paged()
+        self.pool: PagedKVPool | None = None
+        if self._paged:
+            # page size must divide max_seq so the gathered per-lane view
+            # is slot-for-slot the dense cache layout (bit-identity):
+            # demote to the LARGEST divisor <= requested (halving would
+            # collapse e.g. 24-into-64 all the way to 1-slot pages)
+            ps = min(max(serve_cfg.page_size, 1), serve_cfg.max_seq)
+            while serve_cfg.max_seq % ps:
+                ps -= 1
+            mp = serve_cfg.max_seq // ps
+            n_pages = serve_cfg.pool_pages or (b + 2) * mp + 1
+            self.pool = PagedKVPool(n_pages, ps, b, mp)
+            # all attention layers windowed -> the scheduler can cap each
+            # lane's LIVE pages at the window (full-attn layers would still
+            # need the old keys, so mixed patterns keep everything)
+            kinds = {k for k in cfg.block_pattern} & {
+                "attn", "moe", "shared_attn", "attn_swa", "moe_swa"}
+            self._cap_window = (cfg.sliding_window if kinds and
+                                kinds <= {"attn_swa", "moe_swa"} else 0)
+            self.states = init_states(cfg, b, serve_cfg.max_seq,
+                                      int8_kv=serve_cfg.int8_kv,
+                                      window_slack=self._window_slack,
+                                      paged_pages=n_pages, page_size=ps)
+            self._clear_fn = jax.jit(_paged_clear, donate_argnums=(0,))
+            self._copy_fn = jax.jit(_paged_copy, donate_argnums=(0,))
+        else:
+            self.states = init_states(cfg, b, serve_cfg.max_seq,
+                                      int8_kv=serve_cfg.int8_kv,
+                                      window_slack=self._window_slack)
 
         def _packed_masked(params, tokens, positions, states, lane_mask,
                            last_idx, commit_all):
@@ -212,6 +299,17 @@ class ServingEngine:
             return "chunked"
         return "tokenwise"
 
+    def _resolve_paged(self) -> bool:
+        """Paged KV needs every per-forward state mutation to flow through
+        the position-masked page scatter: recurrent states (Mamba/xLSTM)
+        and per-lane cross-attention KV don't, so those archs keep the
+        dense layout (the request just falls back silently)."""
+        if not self.scfg.paged or self.kv_source is not None:
+            return False
+        if self.cfg.has_recurrent_state:
+            return False
+        return not any(k in ("xattn", "dec") for k in self.cfg.block_pattern)
+
     def _token_buckets(self) -> tuple[int, ...]:
         """Static row lengths for the packed forward.
 
@@ -243,6 +341,35 @@ class ServingEngine:
     def mode(self) -> str:
         """Active schedule: 'packed', 'chunked', or 'tokenwise'."""
         return self._mode
+
+    @property
+    def paged(self) -> bool:
+        """True when the paged KV pool backs this engine's caches."""
+        return self._paged
+
+    def _apply_pool_actions(self, actions) -> None:
+        """Replay the allocator's device actions on the arena IN ORDER
+        (an evicted page can be re-allocated as a COW target inside one
+        batch), coalescing runs of consecutive clears into one masked
+        reset."""
+        pending: list[int] = []
+
+        def flush():
+            if pending:
+                mask = np.zeros(self.pool.n, bool)
+                mask[pending] = True
+                self.states = self._clear_fn(self.states, jnp.asarray(mask))
+                pending.clear()
+
+        for act in actions:
+            if act[0] == "clear":
+                pending.append(act[1])
+                continue
+            flush()
+            _, src, dst, keep = act
+            self.states = self._copy_fn(self.states, np.int32(src),
+                                        np.int32(dst), np.int32(keep))
+        flush()
 
     @property
     def chunk_buckets(self) -> tuple[int, ...]:
@@ -282,6 +409,10 @@ class ServingEngine:
                 self.params, jnp.zeros((b, t), jnp.int32),
                 jnp.full((b, t), -1, jnp.int32), self.states,
                 jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32), True)
+        if self._paged:
+            # warmup prompts must not linger as shareable prefixes (or hold
+            # pages): flush the radix index before real traffic arrives
+            self._apply_pool_actions(self.pool.flush_tree())
         self.finished.clear()
         self.reset_stats()
 
@@ -300,6 +431,10 @@ class ServingEngine:
             "prompt_tokens": 0, "decode_tokens": 0, "pad_tokens": 0,
             "budget_tokens": 0, "prefix_len_hist": {},
         }
+        if self._paged:
+            # prefix-hit / COW / eviction counters live in pool.stats (one
+            # source of truth); reset in lockstep with the engine's
+            self.pool.reset_stats()
 
     # -- API -------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 32, request_id=None):
@@ -317,11 +452,21 @@ class ServingEngine:
             if self.lane_active[lane] or not self.queue:
                 continue
             req = self.queue.pop(0)
-            self.states = self._reset_lane(self.states, lane)
+            if self._paged:
+                # lane isolation = page bookkeeping: the previous request's
+                # pages were freed (and cleared) at finish; here the radix
+                # index maps any registered shared prefix into the lane so
+                # prefill SKIPS the shared span entirely
+                shared, actions = self.pool.admit(lane, req["prompt"])
+                self._apply_pool_actions(actions)
+                self.lane_pos[lane] = shared
+                req["_pending_prompt"] = req["prompt"][shared:]
+            else:
+                self.states = self._reset_lane(self.states, lane)
+                self.lane_pos[lane] = 0
+                req["_pending_prompt"] = req["prompt"][:]
             self.lane_request[lane] = req
             self.lane_active[lane] = True
-            self.lane_pos[lane] = 0
-            req["_pending_prompt"] = req["prompt"][:]
             # per-lane PRNG stream, keyed by SUBMISSION id: a request's
             # samples never depend on lane count or co-resident traffic
             self.lane_keys = self.lane_keys.at[lane].set(
@@ -333,6 +478,10 @@ class ServingEngine:
                               "tokens": req["generated"]})
         self.lane_active[lane] = False
         self.lane_request[lane] = None
+        if self._paged:
+            # drop the lane's page references; pages the prefix index still
+            # names survive for future sharers, the rest clear + free
+            self._apply_pool_actions(self.pool.lane_release(lane))
 
     def _check_done(self, lane: int) -> None:
         req = self.lane_request[lane]
@@ -388,6 +537,20 @@ class ServingEngine:
         if not plan:
             return
         b = self.scfg.batch_lanes
+        if self._paged:
+            # back every logical page this step writes with a lane-owned
+            # physical page (alloc / copy-on-write), cap windowed lanes'
+            # live pages, then ship the updated page table
+            actions = []
+            for lane, c in plan.items():
+                p0 = int(self.lane_pos[lane])
+                actions += self.pool.ensure_writable(lane, p0, c)
+                if self._cap_window:
+                    actions += self.pool.cap_window(lane, p0,
+                                                    self._cap_window)
+            self._apply_pool_actions(actions)
+            self.states = _with_page_table(self.states,
+                                           jnp.asarray(self.pool.table))
         need = max(plan.values())
         t = need if need == 1 else next(
             bk for bk in self._buckets if bk >= need)
@@ -411,9 +574,13 @@ class ServingEngine:
             last_idx[lane] = c - 1
             key_pos[lane] = p0 + c - 1        # last fed position
             mask[lane] = True
+        # paged mode always commits the whole tree: the shared arena has no
+        # lane dimension to mask (pad writes are position-dropped, and no
+        # per-lane state leaves exist on paged-capable archs)
         lg, self.states = self._step_fn(
             self.params, jnp.asarray(tok), jnp.asarray(pos), self.states,
-            jnp.asarray(mask), jnp.asarray(last_idx), bool(mask.all()))
+            jnp.asarray(mask), jnp.asarray(last_idx),
+            True if self._paged else bool(mask.all()))
         nxt = np.asarray(_sample(lg, self.scfg.temperature,
                                  self._keys_at(key_pos)))
         st = self.stats
@@ -430,6 +597,10 @@ class ServingEngine:
                     # boundary token: sampled from the last prompt logit,
                     # key folded at the last prompt position (= decode rule)
                     req["generated"].append(int(nxt[lane]))
+                    if self._paged:
+                        # prompt fully in cache: register its pages in the
+                        # radix index so later submissions can share them
+                        self.pool.register_prompt(lane, req["prompt"])
             else:
                 req["generated"].append(int(nxt[lane]))
             self._check_done(lane)
@@ -490,4 +661,11 @@ class ServingEngine:
                f"row_eff={eff:.0f}% forwards[{fwd}] prefix_hist[{hist}]")
         if st["budget_tokens"]:
             out += f" budget_fill={fill:.0f}%"
+        if self._paged:
+            ps = self.pool.stats
+            out += (f" paged[page={self.pool.ps} hits={ps['prefix_hits']}"
+                    f" hit_tokens={ps['prefix_hit_tokens']}"
+                    f" cow={ps['cow_copies']} evict={ps['evictions']}"
+                    f" pages_peak={ps['pages_peak']}"
+                    f" tree_pages={self.pool.tree_pages}]")
         return out

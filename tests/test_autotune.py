@@ -108,6 +108,47 @@ class TestTileLegality:
         assert autotune.packed_blocks(
             16, 128, 64, arch="starcoder2-3b", backend="jnp") == (8, 8)
 
+    def test_paged_blocks_page_aligned(self):
+        """The paged serving family returns a bq dividing the bucket and a
+        PAGE-ALIGNED bk dividing the gathered view (the kernel gathers
+        whole pages; a page-straddling block would split a DMA mid-page)."""
+        for t, ps, s in [(1, 16, 128), (8, 16, 2048), (16, 8, 128),
+                         (32, 16, 4096)]:
+            bq, bk = autotune.paged_blocks(t, ps, s, 64, arch="codeqwen")
+            assert t % bq == 0 and s % bk == 0 and bk % ps == 0, \
+                (t, ps, s, bq, bk)
+        from repro.core.costmodel import paged_attention_tile_cost
+        bq, bk = autotune.paged_blocks(32, 16, 4096, 64, arch="codeqwen")
+        assert paged_attention_tile_cost(32, 4096, 16, 64, bq, bk) \
+            < float("inf")
+
+    def test_paged_gather_overhead_prefers_larger_kv_blocks(self):
+        """The per-page descriptor cost makes tiny KV blocks strictly worse
+        under the paged model than the packed one at equal shapes: the
+        paged argmin's bk must be >= the packed argmin's bk."""
+        for t, s in [(8, 2048), (32, 4096)]:
+            _, bk_paged = autotune.paged_blocks(t, 8, s, 64, arch="a")
+            _, bk_packed = autotune.packed_blocks(t, s, 64, arch="a")
+            assert bk_paged >= bk_packed, (t, s, bk_paged, bk_packed)
+
+    def test_paged_measured_override(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "measured.json"))
+        autotune.reset_measured_cache()
+        autotune.record("paged/8x16x64/codeqwen/jnp", (8, 32), 1.0)
+        autotune.reset_measured_cache()
+        assert autotune.paged_blocks(
+            8, 16, 128, 64, arch="codeqwen", backend="jnp") == (8, 32)
+        # the key omits s_view: a hit recorded at one view length must be
+        # demoted to legal tiles at another (128 does not divide 192)
+        autotune.record("paged/4x16x64/codeqwen/jnp", (4, 128), 1.0)
+        autotune.reset_measured_cache()
+        bq, bk = autotune.paged_blocks(
+            4, 16, 192, 64, arch="codeqwen", backend="jnp")
+        assert 4 % bq == 0 and 192 % bk == 0 and bk % 16 == 0, (bq, bk)
+        assert bk <= 128
+        autotune.reset_measured_cache()
+
     def test_rowwise_blocks_sublane_aligned(self):
         for m in (1, 7, 8, 100, 4096):
             bm = autotune.rowwise_blocks(m, 2048)
@@ -206,6 +247,33 @@ class TestMeasuredCache:
         assert best == (8, 128, 128)
         autotune.reset_measured_cache()
         assert autotune.gemm_blocks(64, 64, 64) == (8, 128, 128)
+
+
+class TestSweepRunner:
+    def test_sweep_writes_keys_autotune_consumes(self, tmp_path,
+                                                 monkeypatch):
+        """`kernel_bench.py --sweep` round trip: the runner times real
+        candidates, records under the exact lookup keys, and a fresh
+        autotune lookup returns the measured blocks."""
+        import sys as _sys, os as _os
+        _sys.path.insert(0, _os.path.join(_os.path.dirname(__file__), ".."))
+        from benchmarks import kernel_bench
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "measured.json"))
+        autotune.reset_measured_cache()
+        keys = kernel_bench.sweep(backend="jnp",
+                                  families=("rowwise", "decode"))
+        assert any(k.startswith("rowwise/") for k in keys)
+        assert any(k.startswith("decode/") for k in keys)
+        import json
+        cache = json.loads((tmp_path / "measured.json").read_text())
+        for key in keys:
+            assert "blocks" in cache[key] and "us" in cache[key]
+        # the lookup path consumes what the sweep wrote
+        dec = next(k for k in keys if k.startswith("decode/"))
+        s, d, g = (int(v) for v in dec.split("/")[1].split("x"))
+        assert autotune.decode_blocks(s, d, g) == cache[dec]["blocks"][0]
+        autotune.reset_measured_cache()
 
 
 class TestFusedEpilogues:

@@ -507,6 +507,186 @@ class TestInt8KVDecodeAttentionDense:
             np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
+class TestPagedAttentionDense:
+    """The gather-based paged decode kernel vs a dense f32 oracle over the
+    GATHERED view: page-table indirection, null-page masking, partial
+    pages, COW-cleared slots, sliding window, GQA, idle lanes."""
+
+    def _dense_view(self, pk, pks, pv, pvs, ppos, pt):
+        """Materialize the per-lane dense view with numpy (from first
+        principles, not ref.py)."""
+        pk, pv = np.asarray(pk, np.float32), np.asarray(pv, np.float32)
+        if pks is not None:
+            pk = pk * np.asarray(pks)
+            pv = pv * np.asarray(pvs)
+        ptc = np.asarray(pt)
+        k = pk[ptc]                             # (B, MP, ps, Hkv, D)
+        v = pv[ptc]
+        pos = np.asarray(ppos)[ptc]             # (B, MP, ps)
+        b, mp, ps = pos.shape
+        return (k.reshape(b, mp * ps, *k.shape[3:]),
+                v.reshape(b, mp * ps, *v.shape[3:]),
+                pos.reshape(b, mp * ps))
+
+    def _dense(self, q, k, v, pos, qpos, window=0):
+        q = np.asarray(q, np.float32)
+        b, hq, d = q.shape
+        hkv = k.shape[2]
+        out = np.zeros((b, hq, d), np.float32)
+        for bi in range(b):
+            for h in range(hq):
+                kv_h = h // (hq // hkv)
+                valid = (pos[bi] >= 0) & (pos[bi] <= int(qpos[bi]))
+                if window:
+                    valid &= pos[bi] > (int(qpos[bi]) - window)
+                if not valid.any():
+                    continue
+                logits = (k[bi, :, kv_h] @ q[bi, h]) / np.sqrt(d)
+                logits = np.where(valid, logits, -1e30)
+                p = np.exp(logits - logits.max())
+                p = p / p.sum()
+                out[bi, h] = p @ v[bi, :, kv_h]
+        return out
+
+    def _arena(self, rng, npg=10, ps=8, hkv=2, d=32, int8=True):
+        if int8:
+            pk = jnp.asarray(rng.integers(-127, 128, (npg, ps, hkv, d)),
+                             jnp.int8)
+            pv = jnp.asarray(rng.integers(-127, 128, (npg, ps, hkv, d)),
+                             jnp.int8)
+            pks = jnp.asarray(np.abs(rng.normal(size=(npg, ps, hkv, 1)))
+                              + 1e-3, jnp.float32)
+            pvs = jnp.asarray(np.abs(rng.normal(size=(npg, ps, hkv, 1)))
+                              + 1e-3, jnp.float32)
+        else:
+            pk = jnp.asarray(rng.normal(size=(npg, ps, hkv, d)), jnp.bfloat16)
+            pv = jnp.asarray(rng.normal(size=(npg, ps, hkv, d)), jnp.bfloat16)
+            pks = pvs = None
+        return pk, pks, pv, pvs
+
+    def _tables(self, ps=8):
+        """3 lanes: full chain w/ partial last page; short chain; idle.
+        Page 0 = null (ppos -1), plus a COW'd page with cleared tail."""
+        npg, mp = 10, 4
+        ppos = np.full((npg, ps), -1, np.int32)
+        pt = np.zeros((3, mp), np.int32)
+        pt[0] = [1, 2, 3, 0]
+        for j, pid in enumerate([1, 2, 3]):
+            ppos[pid] = np.arange(j * ps, (j + 1) * ps)
+        ppos[3, ps // 2:] = -1                   # partial last page
+        pt[1] = [4, 5, 0, 0]
+        ppos[4] = np.arange(ps)
+        ppos[5, :3] = np.arange(ps, ps + 3)      # COW keep=3: tail cleared
+        qpos = np.array([2 * ps + ps // 2 - 1, ps + 2, -1], np.int32)
+        return jnp.asarray(ppos), jnp.asarray(pt), jnp.asarray(qpos)
+
+    @pytest.mark.parametrize("int8", [True, False])
+    @pytest.mark.parametrize("window", [0, 9])
+    def test_kernel_matches_dense_oracle(self, rng, int8, window):
+        from repro.kernels.paged_attention import paged_decode_attention
+        ps, hkv, hq, d = 8, 2, 8, 32
+        pk, pks, pv, pvs = self._arena(rng, ps=ps, hkv=hkv, d=d, int8=int8)
+        ppos, pt, qpos = self._tables(ps=ps)
+        q = jnp.asarray(rng.normal(size=(3, hq, d)), jnp.float32)
+        got = np.asarray(paged_decode_attention(
+            q, pk, pks, pv, pvs, ppos, pt, qpos, window=window,
+            interpret=True), np.float32)
+        want = self._dense(q, *self._dense_view(pk, pks, pv, pvs, ppos, pt),
+                           qpos, window=window)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+        assert (got[2] == 0).all()               # idle lane: all masked
+
+    def test_window_excluding_every_slot_emits_zeros(self, rng):
+        """A lane whose cached positions all fell out of the sliding
+        window must emit exact zeros from BOTH the kernel and the jnp ref
+        (the live-mask must apply the window term too)."""
+        from repro.kernels.paged_attention import paged_decode_attention
+        ps = 8
+        pk, pks, pv, pvs = self._arena(rng, ps=ps)
+        ppos, pt, _ = self._tables(ps=ps)
+        # lane 0 holds positions 0..19; qpos far ahead with window 4
+        qpos = jnp.asarray([100, 100, -1], jnp.int32)
+        q = jnp.asarray(rng.normal(size=(3, 8, 32)), jnp.float32)
+        got = np.asarray(paged_decode_attention(
+            q, pk, pks, pv, pvs, ppos, pt, qpos, window=4, interpret=True))
+        ref_out = np.asarray(ref.paged_decode_attention_ref(
+            q, pk, pks, pv, pvs, ppos, pt, qpos, window=4))
+        assert (got == 0).all()
+        assert (ref_out == 0).all()
+
+    def test_ops_dispatch_both_backends(self, rng):
+        """ops.paged_attention_decode: jnp gather path == pallas kernel."""
+        ps = 8
+        pk, pks, pv, pvs = self._arena(rng, ps=ps)
+        ppos, pt, qpos = self._tables(ps=ps)
+        q = jnp.asarray(rng.normal(size=(3, 8, 32)), jnp.float32)
+        prev = ops.backend()
+        try:
+            outs = {}
+            for backend in ("jnp", "pallas"):
+                ops.set_backend(backend)
+                outs[backend] = np.asarray(ops.paged_attention_decode(
+                    q, pk, pks, pv, pvs, ppos, pt, qpos), np.float32)
+        finally:
+            ops.set_backend(prev)
+        np.testing.assert_allclose(outs["jnp"], outs["pallas"],
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_gqa_groups_read_their_own_kv_head(self, rng):
+        """6 query heads over 3 KV heads through the page indirection:
+        zeroing KV head j moves exactly query heads 2j, 2j+1."""
+        from repro.kernels.paged_attention import paged_decode_attention
+        ps, hkv, hq, d = 8, 3, 6, 32
+        pk, pks, pv, pvs = self._arena(rng, ps=ps, hkv=hkv, d=d)
+        ppos, pt, qpos = self._tables(ps=ps)
+        q = jnp.asarray(rng.normal(size=(3, hq, d)), jnp.float32)
+        run = lambda pv_: np.asarray(paged_decode_attention(
+            q, pk, pks, pv_, pvs, ppos, pt, qpos, interpret=True),
+            np.float32)
+        base = run(pv)
+        for j in range(hkv):
+            vz = np.asarray(pv).copy()
+            vz[:, :, j] = 0
+            got = run(jnp.asarray(vz))
+            moved = [h for h in range(hq)
+                     if np.abs(got[0, h] - base[0, h]).max() > 1e-6]
+            assert moved == [2 * j, 2 * j + 1]
+
+    def test_model_write_then_gather_roundtrip(self, rng):
+        """models/attention paged write + gathered read reproduces the
+        dense cache contents slot for slot (the bit-identity substrate)."""
+        from repro.models.attention import (
+            _read_cache, _read_paged, _write_cache, _write_paged,
+            init_cache, init_paged_cache,
+        )
+        from repro.models.config import ArchConfig
+        cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=64,
+                         n_heads=4, n_kv_heads=2, d_ff=4, vocab_size=8,
+                         d_head=16)
+        b, max_seq, ps = 2, 32, 8
+        dense = init_cache(cfg, b, max_seq, int8=True)
+        paged = init_paged_cache(cfg, b, 2 * b * (max_seq // ps) + 1, ps,
+                                 max_seq // ps, int8=True)
+        # identity-ish page table: lane 0 -> pages 1..4, lane 1 -> 5..8
+        pt = jnp.asarray(np.arange(1, 2 * max_seq // ps + 1,
+                                   dtype=np.int32).reshape(b, -1))
+        paged = dict(paged, pt=pt)
+        # two span writes at different depths + a pad column
+        for p0, c in ((0, 5), (5, 3)):
+            k = jnp.asarray(rng.normal(size=(b, c + 1, 2, 16)), jnp.float32)
+            v = jnp.asarray(rng.normal(size=(b, c + 1, 2, 16)), jnp.float32)
+            pos = np.tile(np.arange(p0, p0 + c + 1, dtype=np.int32), (b, 1))
+            pos[:, -1] = -1                       # pad: both paths drop it
+            dense = _write_cache(dense, k, v, jnp.asarray(pos))
+            paged = _write_paged(paged, k, v, jnp.asarray(pos))
+        kd, vd = _read_cache(dense, jnp.float32)
+        kp, vp, kpos = _read_paged(paged, jnp.float32)
+        valid = np.asarray(dense["pos_ids"]) >= 0
+        assert (np.asarray(kpos) == np.asarray(dense["pos_ids"])).all()
+        assert (np.asarray(kd)[valid] == np.asarray(kp)[valid]).all()
+        assert (np.asarray(vd)[valid] == np.asarray(vp)[valid]).all()
+
+
 class TestSSDScan:
     """Chunked Mamba-2 SSD kernel vs the sequential-recurrence oracle."""
 

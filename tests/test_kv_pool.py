@@ -1,0 +1,260 @@
+"""Property/fuzz coverage for the paged KV allocator (serve/kv_pool.py).
+
+The pool is pure host bookkeeping, so these tests drive it directly with
+random submit/finish/reset sequences and assert the global invariants
+after every operation (``PagedKVPool.check``): no page leaks, refcounts
+equal to table occurrences, free/held partition exact, tree reachability.
+Device semantics are modeled by replaying the action stream into a
+shadow arena of per-slot "owner tags" — a freed lane's pages must never
+surface in another lane's view without an intervening clear or COW.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.kv_pool import PagedKVPool
+
+
+def _mk(lanes=3, mp=4, ps=4, extra=None):
+    n = lanes * mp + (2 * mp if extra is None else extra) + 1
+    return PagedKVPool(n, ps, lanes, mp)
+
+
+class _ShadowArena:
+    """Replays clear/copy actions + writes; tracks which request wrote
+    every (page, slot) so cross-lane leaks are detectable."""
+
+    def __init__(self, pool: PagedKVPool):
+        self.pool = pool
+        self.tag = np.full((pool.n, pool.ps), -1, np.int64)  # -1 = empty
+
+    def apply(self, actions):
+        for act in actions:
+            if act[0] == "clear":
+                self.tag[act[1]] = -1
+            else:
+                _, src, dst, keep = act
+                self.tag[dst] = self.tag[src]
+                self.tag[dst, keep:] = -1
+
+    def write(self, lane, pos0, count, req_tag):
+        for pos in range(pos0, pos0 + count):
+            pid = int(self.pool.table[lane, pos // self.pool.ps])
+            assert pid != 0, "write through an unmapped page"
+            self.tag[pid, pos % self.pool.ps] = req_tag
+
+    def view_tags(self, lane, upto):
+        """Tags visible to the lane over positions [0, upto)."""
+        out = []
+        for pos in range(upto):
+            pid = int(self.pool.table[lane, pos // self.pool.ps])
+            if pid:
+                out.append(self.tag[pid, pos % self.pool.ps])
+        return out
+
+
+class TestPoolBasics:
+    def test_admit_shares_full_pages_and_cows_partial(self):
+        pool = _mk()
+        arena = _ShadowArena(pool)
+        prompt = list(range(100, 110))  # 2.5 pages of 4
+        arena.apply(pool.ensure_writable(0, 0, len(prompt)))
+        arena.write(0, 0, len(prompt), req_tag=0)
+        pool.register_prompt(0, prompt)
+        pool.check()
+        # same first 9 tokens, diverging inside page 2
+        p2 = prompt[:9] + [999, 998]
+        shared, actions = pool.admit(1, p2)
+        arena.apply(actions)
+        pool.check()
+        assert shared == 9  # 2 full pages + 1 slot of page 2 via COW
+        assert pool.stats["cow_copies"] == 1
+        assert pool.table[1, 0] == pool.table[0, 0]  # full pages shared
+        assert pool.table[1, 1] == pool.table[0, 1]
+        assert pool.table[1, 2] not in (0, pool.table[0, 2])  # COW copy
+        # the COW page kept exactly the shared slot, cleared the rest
+        assert arena.view_tags(1, 9) == [0] * 9
+
+    def test_admit_caps_at_prompt_minus_one(self):
+        pool = _mk()
+        prompt = list(range(8))  # exactly 2 full pages
+        pool.ensure_writable(0, 0, 8)
+        pool.register_prompt(0, prompt)
+        shared, actions = pool.admit(1, list(prompt))
+        # identical prompt: at least the last token must still be fed, so
+        # the second page can only be COW-shared up to 3 of its 4 slots
+        assert shared == 7
+        assert pool.stats["cow_copies"] == 1
+        pool.check()
+
+    def test_release_keeps_tree_pages(self):
+        pool = _mk()
+        prompt = list(range(8))
+        pool.ensure_writable(0, 0, 8)
+        pool.register_prompt(0, prompt)
+        held = pool.tree_pages
+        free0 = pool.free_pages
+        actions = pool.lane_release(0)
+        pool.check()
+        assert pool.tree_pages == held == 2
+        assert not actions  # nothing freed: the prefix index holds them
+        assert pool.free_pages == free0
+        # a later identical submission still shares them
+        shared, _ = pool.admit(1, prompt + [42])
+        assert shared == 8
+
+    def test_flush_tree_frees_everything(self):
+        pool = _mk()
+        pool.ensure_writable(0, 0, 8)
+        pool.register_prompt(0, list(range(8)))
+        pool.lane_release(0)
+        actions = pool.flush_tree()
+        pool.check()
+        assert pool.tree_pages == 0
+        assert pool.free_pages == pool.n - 1
+        assert {a[0] for a in actions} == {"clear"}
+
+    def test_eviction_reclaims_lru_leaf(self):
+        pool = _mk(lanes=1, mp=2, ps=4, extra=1)  # n = 4 pages
+        pool.ensure_writable(0, 0, 8)
+        pool.register_prompt(0, list(range(8)))
+        pool.lane_release(0)
+        assert pool.free_pages == 1
+        # two fresh allocations force one eviction of the deepest leaf
+        a1 = pool.ensure_writable(0, 0, 8)
+        pool.check()
+        assert pool.stats["evictions"] >= 1
+        assert any(a[0] == "clear" for a in a1)
+
+    def test_cow_under_pressure_never_evicts_its_source(self):
+        """Regression: a COW allocation with an empty free list must not
+        evict (and clear) the page it is about to copy from — the shared
+        span would silently vanish.  Two registered leaves, free list
+        drained: the eviction must take the OTHER leaf and the copy's
+        source must not be cleared anywhere in its action batch."""
+        pool = _mk(lanes=1, mp=2, ps=4, extra=2)   # 5 usable pages
+        pool.ensure_writable(0, 0, 3)
+        pool.register_prompt(0, [1, 2, 3])         # older leaf R
+        pool.lane_release(0)
+        pool.ensure_writable(0, 0, 3)
+        pool.register_prompt(0, [7, 8, 9])         # newer leaf S, page s1
+        pool.lane_release(0)
+        s1 = next(iter(
+            n.page for n in pool._root.children if n.tokens == (7, 8, 9)))
+        # drain the free list (simulates pages held elsewhere)
+        held = [pool._alloc([]) for _ in range(pool.free_pages)]
+        shared, actions = pool.admit(0, [7, 8, 999])   # partial match on S
+        assert shared == 2
+        ((_, src, dst, keep),) = [a for a in actions if a[0] == "copy"]
+        assert (src, keep) == (s1, 2) and dst != s1
+        cleared_before = [a[1] for a in actions[:actions.index(
+            ("copy", src, dst, keep))] if a[0] == "clear"]
+        assert s1 not in cleared_before, actions   # source survived eviction
+        for pid in held:
+            pool._free.append(pid)
+
+    def test_cow_skips_share_when_source_is_only_evictable_leaf(self):
+        """If the COW source is the ONLY evictable leaf and the free list
+        is empty, admit must give up the partial share cleanly (lane
+        prefills the page itself) — never clear-then-copy the source,
+        never crash."""
+        pool = _mk(lanes=1, mp=2, ps=4, extra=1)
+        pool.ensure_writable(0, 0, 3)
+        pool.register_prompt(0, [7, 8, 9])         # sole leaf S
+        pool.lane_release(0)
+        held = [pool._alloc([]) for _ in range(pool.free_pages)]
+        shared, actions = pool.admit(0, [7, 8, 999])
+        assert shared == 0                         # share abandoned, no COW
+        assert not [a for a in actions if a[0] == "copy"]
+        assert pool.tree_pages == 1                # S intact for next time
+        for pid in held:
+            pool._free.append(pid)
+        pool.check()
+
+    def test_window_cap_unmaps_behind_window(self):
+        pool = _mk(lanes=1, mp=8, ps=4, extra=2)
+        pool.ensure_writable(0, 0, 20)       # pages 0..4 mapped
+        actions = pool.cap_window(0, next_pos=20, window=8)
+        pool.check()
+        # pages whose last position < 20 - 8 = 12 go: pages 0, 1, 2
+        assert (pool.table[0, :3] == 0).all()
+        assert (pool.table[0, 3:5] != 0).all()
+        assert sum(a[0] == "clear" for a in actions) == 3
+
+
+class TestPoolFuzz:
+    """Random engine-shaped traffic against the invariant checker and the
+    shadow arena: submit (admit + incremental writes + register), finish,
+    reset, window caps — across 3 seeds x 200 ops."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_random_lifecycle_no_leaks_no_cross_lane_reads(self, seed):
+        rng = np.random.default_rng(seed)
+        lanes, mp, ps = 3, 4, 4
+        pool = _mk(lanes=lanes, mp=mp, ps=ps)
+        arena = _ShadowArena(pool)
+        max_seq = mp * ps
+        lane_req = [None] * lanes   # (req_tag, prompt, pos, shared)
+        next_tag = [1]
+
+        def submit(lane):
+            # prompts drawn from a tiny alphabet so prefixes collide often
+            n = int(rng.integers(2, max_seq))
+            prompt = [int(t) for t in rng.integers(0, 3, size=n)]
+            tag = next_tag[0]
+            next_tag[0] += 1
+            shared, actions = pool.admit(lane, prompt)
+            arena.apply(actions)
+            # the shared span must be visible and fully populated: every
+            # slot the prefix mapped carries SOME previous request's tag
+            # (never -1/cleared, never this request's own)
+            seen = arena.view_tags(lane, shared)
+            assert len(seen) == shared and all(
+                0 < t < tag for t in seen), (shared, seen)
+            lane_req[lane] = [tag, prompt, shared, shared]
+
+        def step(lane):
+            tag, prompt, pos, shared = lane_req[lane]
+            c = int(rng.integers(1, 5))
+            c = min(c, max_seq - pos)
+            if c <= 0:
+                return finish(lane)
+            arena.apply(pool.ensure_writable(lane, pos, c))
+            arena.write(lane, pos, c, tag)
+            lane_req[lane][2] = pos + c
+            if pos < len(prompt) <= pos + c:
+                pool.register_prompt(lane, prompt)
+
+        def finish(lane):
+            arena.apply(pool.lane_release(lane))
+            lane_req[lane] = None
+
+        for _ in range(200):
+            lane = int(rng.integers(0, lanes))
+            op = rng.random()
+            if lane_req[lane] is None:
+                submit(lane)
+            elif op < 0.2:
+                finish(lane)
+            elif op < 0.25 and pool.tree_pages:
+                arena.apply(pool.flush_tree())
+            else:
+                step(lane)
+            pool.check()
+            # lane isolation: everything a lane can read below its write
+            # position is either its own, inherited prefix, or empty-masked
+            for ln in range(lanes):
+                if lane_req[ln] is None:
+                    continue
+                tag, _, pos, shared = lane_req[ln]
+                for t in arena.view_tags(ln, pos):
+                    assert t <= tag, "future request's data visible"
+
+        # drain: release every lane, flush the tree -> zero leaked pages
+        for ln in range(lanes):
+            if lane_req[ln] is not None:
+                finish(ln)
+        arena.apply(pool.flush_tree())
+        pool.check()
+        assert pool.free_pages == pool.n - 1
+        assert pool.stats["prefix_hits"] > 0       # the workload did share
+        assert pool.stats["cow_copies"] > 0        # and did diverge in-page

@@ -456,6 +456,145 @@ class TestServing:
         assert eng._step_fn._cache_size() == n0  # zero in-flight compiles
 
 
+class TestPagedServing:
+    """Paged KV pool vs the dense engine: paging (and prefix sharing) is a
+    memory-layout change only — outputs must be IDENTICAL, greedy and
+    sampled, across every schedule and both cache precisions."""
+
+    def _engine(self, paged, **kw):
+        cfg, params = TestServing._model()
+        kw.setdefault("batch_lanes", 2)
+        kw.setdefault("max_seq", 48)
+        return ServingEngine(params, cfg, ServeConfig(paged=paged, **kw))
+
+    def _run(self, paged, prompts, max_new=5, **kw):
+        eng = self._engine(paged, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=max_new, request_id=i)
+        return {d["id"]: d["tokens"] for d in eng.run_until_drained()}, eng
+
+    PROMPTS = [[7, 8, 9, 10, 11, 12, 13, 14, 15], [3, 4, 5],
+               [20 + i for i in range(17)], [9, 9, 9, 9, 9]]
+
+    @pytest.mark.parametrize("int8_kv", [False, True])
+    @pytest.mark.parametrize("mode", ["tokenwise", "chunked", "packed"])
+    def test_paged_matches_dense_greedy(self, int8_kv, mode):
+        kw = dict(MODES[mode], int8_kv=int8_kv)
+        want, _ = self._run(False, self.PROMPTS, **kw)
+        got, eng = self._run(True, self.PROMPTS, **kw)
+        assert eng.paged
+        assert got == want
+        eng.pool.check()  # and no page leaked doing it
+
+    @pytest.mark.parametrize("int8_kv", [False, True])
+    def test_paged_matches_dense_sampled(self, int8_kv):
+        kw = dict(temperature=0.9, seed=3, token_budget=8, int8_kv=int8_kv)
+        want, _ = self._run(False, self.PROMPTS, **kw)
+        got, _ = self._run(True, self.PROMPTS, **kw)
+        assert got == want
+
+    @pytest.mark.parametrize("int8_kv", [False, True])
+    def test_prefix_reuse_skips_prefill_and_stays_exact(self, int8_kv):
+        """Two sequential requests sharing a 24-token prefix: the second
+        maps the first's pages (nonzero hit stat, fewer prompt tokens fed)
+        and still produces exactly the dense engine's tokens."""
+        pre = list(range(30, 54))
+        reqs = [pre + [5, 6], pre + [9, 9, 9]]
+
+        def drain(eng):
+            out = {}
+            for i, p in enumerate(reqs):   # sequential: 2nd sees 1st's tree
+                eng.submit(p, max_new=4, request_id=i)
+                eng.run_until_drained()
+            return {d["id"]: d["tokens"] for d in eng.finished}
+
+        dense = self._engine(False, int8_kv=int8_kv, max_seq=64,
+                             token_budget=8)
+        paged = self._engine(True, int8_kv=int8_kv, max_seq=64,
+                             token_budget=8)
+        assert drain(paged) == drain(dense)
+        assert paged.pool.stats["prefix_hit_tokens"] > 0
+        assert paged.stats["prompt_tokens"] < dense.stats["prompt_tokens"]
+        assert paged.pool.stats["cow_copies"] >= 1  # diverged inside a page
+        paged.pool.check()
+
+    def test_identical_prompt_shares_all_full_pages(self):
+        """Same prompt resubmitted: every full page is shared (no copies),
+        only the boundary-token page is COW'd, output identical."""
+        prompt = list(range(40, 72))  # exactly 2 pages of 16
+        eng = self._engine(True, max_seq=64, token_budget=8)
+        eng.submit(prompt, max_new=4, request_id="a")
+        eng.run_until_drained()
+        eng.submit(prompt, max_new=4, request_id="b")
+        eng.run_until_drained()
+        by_id = {d["id"]: d["tokens"] for d in eng.finished}
+        assert by_id["a"] == by_id["b"]
+        assert eng.pool.stats["prefix_hit_tokens"] == len(prompt) - 1
+
+    def test_lane_reuse_isolation(self):
+        """A lane that served a long request then an unrelated short one
+        gives the short one a fresh-engine result (freed pages never leak
+        into the next occupant's reads)."""
+        eng = self._engine(True, batch_lanes=1, token_budget=8)
+        eng.submit(list(range(30, 40)), max_new=6, request_id="long")
+        eng.submit([5, 6, 7], max_new=6, request_id="short")
+        reused = {d["id"]: d["tokens"] for d in eng.run_until_drained()}
+        fresh = self._engine(True, batch_lanes=1, token_budget=8)
+        fresh.submit([5, 6, 7], max_new=6, request_id="short")
+        assert reused["short"] == fresh.run_until_drained()[0]["tokens"]
+
+    @pytest.mark.parametrize("mode", ["chunked", "packed"])
+    def test_sliding_window_paged_matches_dense(self, mode):
+        """Windowed arch, prompt >> window: the paged engine (live pages
+        capped at the window) must match the dense ring cache."""
+        from repro.models.config import ArchConfig
+        cfg = ArchConfig(name="swa-paged", family="dense", n_layers=2,
+                         d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab_size=256, d_head=16,
+                         block_pattern=("attn_swa",), sliding_window=32)
+        params = init_params(KEY, cfg)
+        prompt = list(range(2, 72))  # 70 tokens: far beyond the window
+
+        def run(paged):
+            eng = ServingEngine(params, cfg,
+                                ServeConfig(batch_lanes=2, max_seq=128,
+                                            paged=paged, **MODES[mode]))
+            eng.submit(prompt, max_new=5, request_id=0)
+            toks = eng.run_until_drained()[0]["tokens"]
+            return toks, eng
+
+        want, _ = run(False)
+        got, eng = run(True)
+        assert got == want
+        assert eng._cap_window == 32
+        eng.pool.check()
+
+    def test_warmup_flushes_tree_and_keeps_streams(self):
+        """warmup() on a paged engine compiles the buckets, leaves no
+        warmup prefix in the radix index, and does not shift later
+        requests' sampled tokens."""
+        def run(warm):
+            eng = self._engine(True, temperature=0.9, seed=3, token_budget=8)
+            if warm:
+                eng.warmup()
+                assert eng.pool.tree_pages == 0
+                assert eng.pool.free_pages == eng.pool.n - 1
+            for i in range(3):
+                eng.submit([5, 6, 7, 8], max_new=6, request_id=i)
+            return {d["id"]: d["tokens"] for d in eng.run_until_drained()}
+
+        assert run(warm=True) == run(warm=False)
+
+    def test_recurrent_arch_falls_back_to_dense(self):
+        cfg = get_config("xlstm-350m", reduced=True)
+        params = init_params(KEY, cfg)
+        eng = ServingEngine(params, cfg,
+                            ServeConfig(batch_lanes=2, max_seq=32, paged=True))
+        assert not eng.paged and eng.pool is None
+        eng.submit([3, 4, 5], max_new=3, request_id=0)
+        assert len(eng.run_until_drained()) == 1
+
+
 class TestShardingRules:
     def test_param_specs_resolve_without_mesh(self):
         set_axis_env(AxisEnv())
