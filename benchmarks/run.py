@@ -99,6 +99,35 @@ def _decode_perf_gate(path: str) -> None:
         print("decode gate: no decode pairs in artifact (fresh checkout)")
 
 
+def _stream_ttft_gate(path: str) -> None:
+    """Overload-robustness gate: under the sustained Poisson workload,
+    paged serving WITH memory pressure (preempt + swap-to-host on a tiny
+    pool) must keep p99 TTFT within 25% of paged serving without pressure
+    — swap is allowed to cost something, but not to blow the tail latency
+    the front end exists to bound.  Same merged-artifact semantics as the
+    decode gate, so smoke runs enforce it against the committed numbers.
+    """
+    with open(os.path.join(REPO_ROOT, path)) as f:
+        entries = json.load(f).get("entries", {})
+    suffix = "_paged_swap"
+    pairs = [(k[: -len(suffix)] + "_paged", k) for k in entries
+             if k.startswith("e2e/serve_stream_") and k.endswith(suffix)
+             and k[: -len(suffix)] + "_paged" in entries]
+    for pkey, skey in sorted(pairs):
+        p_us, s_us = entries[pkey]["us"], entries[skey]["us"]
+        ratio = s_us / max(p_us, 1e-9)
+        print(f"stream gate: {skey} p99 TTFT {s_us}us vs {pkey} {p_us}us "
+              f"({ratio:.2f}x, limit 1.25x)")
+        if s_us > 1.25 * p_us:
+            raise SystemExit(
+                f"PERF regression: {skey} p99 TTFT ({s_us}us) exceeds "
+                f"1.25x {pkey} ({p_us}us) — preempt/swap overhead is no "
+                f"longer bounded")
+    if not pairs:
+        print("stream gate: no serve_stream pairs in artifact "
+              "(fresh checkout)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -129,6 +158,7 @@ def main() -> None:
                 backend=args.backend)
     _write_json("BENCH_e2e.json", e2e_rows, meta, smoke=args.smoke)
     _decode_perf_gate("BENCH_e2e.json")
+    _stream_ttft_gate("BENCH_e2e.json")
 
 
 if __name__ == "__main__":

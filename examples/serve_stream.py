@@ -1,0 +1,70 @@
+"""Continuous-batching front-end example: timed Poisson arrivals through
+the admission queue, with priorities, SLO targets, and a deliberately tiny
+KV page pool so the engine must PREEMPT a lane and SWAP its pages to host
+memory mid-stream — then resume it bit-identically.  The same traffic is
+replayed against an ample pool to show what the pressure costs.
+
+    PYTHONPATH=src python examples/serve_stream.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import ServeConfig, ServingEngine
+
+N_REQ = 12
+
+
+def schedule(vocab: int):
+    """Fixed-seed Poisson arrivals (~3 ms mean gap), mixed prompt lengths,
+    every third request at priority 1 with a tight TTFT target."""
+    rng = np.random.default_rng(7)
+    t, out = 0.0, []
+    for i in range(N_REQ):
+        t += float(rng.exponential(0.003))
+        n = int(rng.integers(10, 44))
+        prompt = rng.integers(2, vocab, size=n).tolist()
+        out.append((t, dict(prompt=prompt, max_new=6, request_id=i,
+                            priority=1 if i % 3 == 0 else 0,
+                            ttft_slo_ms=200.0, tpot_slo_ms=50.0)))
+    return out
+
+
+def stream(params, cfg, pool_pages: int, label: str):
+    engine = ServingEngine(
+        params, cfg,
+        ServeConfig(batch_lanes=3, max_seq=64, token_budget=16,
+                    temperature=0.7, paged=True, page_size=8,
+                    pool_pages=pool_pages, queue_limit=32, seed=3))
+    engine.warmup()
+    done, rejected = engine.run_stream(schedule(cfg.vocab_size))
+    m = engine.serving_metrics()
+    print(f"  {label}: {len(done)} served, {len(rejected)} rejected, "
+          f"ttft p50/p99 = {m['ttft_p50_ms']}/{m['ttft_p99_ms']} ms, "
+          f"tpot p50/p99 = {m['tpot_p50_ms']}/{m['tpot_p99_ms']} ms")
+    print(f"    queue_peak={m['queue_peak']} preempt={m['preemptions']} "
+          f"resume={m['resumes']} swap_pages={m['swap_out_pages']}"
+          f"/{m['swap_in_pages']} slo_miss ttft={m['slo_ttft_miss']} "
+          f"tpot={m['slo_tpot_miss']}")
+    return {d["id"]: d["tokens"] for d in done}
+
+
+cfg = get_config("starcoder2-3b", reduced=True)
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+print(f"streaming {N_REQ} Poisson-arrival requests (3 lanes, sampled "
+      f"temperature=0.7):")
+ample = stream(params, cfg, pool_pages=0, label="ample pool   ")
+tiny = stream(params, cfg, pool_pages=12, label="tiny pool(12)")
+
+# preemption + swap must be invisible in the tokens: per-lane PRNG streams
+# are keyed by (submission id, position), not by scheduling history
+assert tiny == ample, "preempted stream diverged from unconstrained stream"
+print("tiny-pool outputs bit-identical to ample-pool outputs: OK")
+print("done")

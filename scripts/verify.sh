@@ -6,8 +6,10 @@
 # packed serving drains: a bf16 one and a SwiGLU w8a8 one exercising the
 # fused dual-GEMM gated-MLP path), a packed-vs-chunked-vs-tokenwise
 # greedy-equivalence smoke, a paged-vs-dense shared-prefix equivalence
-# smoke (bit-identical outputs + nonzero prefix-hit stat), and a doc link
-# check.
+# smoke (bit-identical outputs + nonzero prefix-hit stat), a
+# continuous-batching overload smoke (Poisson arrivals into a deliberately
+# tiny pool: zero leaks, >=1 preemption + swap round trip, outputs
+# bit-identical to an unconstrained offline drain), and a doc link check.
 #
 # Usage: scripts/verify.sh
 set -euo pipefail
@@ -45,6 +47,9 @@ PYTHONPATH=src python scripts/greedy_equiv_smoke.py
 
 echo "== paged-vs-dense shared-prefix equivalence smoke =="
 PYTHONPATH=src python scripts/paged_equiv_smoke.py
+
+echo "== continuous-batching overload smoke (tiny pool: preempt + swap) =="
+PYTHONPATH=src python scripts/overload_smoke.py
 
 echo "== doc link check =="
 python scripts/check_doc_links.py

@@ -43,6 +43,17 @@ def main() -> None:
                          "(docs/serving.md; falls back to dense caches for "
                          "recurrent/cross-attention archs)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical KV pool pages (paged mode; 0 = auto-size "
+                         "for the lane count, >0 may force preemption + "
+                         "page swap under load)")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="admission queue bound (0 = unbounded); submits "
+                         "beyond it are rejected explicitly")
+    ap.add_argument("--stream-gap-ms", type=float, default=0.0,
+                    help="mean Poisson inter-arrival gap in ms; >0 switches "
+                         "from offline drain to the timed run_stream front "
+                         "end and prints TTFT/TPOT percentiles")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -63,15 +74,29 @@ def main() -> None:
                     int8_kv=args.int8_kv, temperature=args.temperature,
                     token_budget=args.token_budget,
                     prefill_chunk=args.prefill_chunk, seed=args.seed,
-                    paged=args.paged, page_size=args.page_size),
+                    paged=args.paged, page_size=args.page_size,
+                    pool_pages=args.pool_pages,
+                    queue_limit=args.queue_limit),
         kv_source=kv_source)
 
     rng = np.random.default_rng(args.seed)
+    reqs = []
     for i in range(args.requests):
         prompt = rng.integers(2, cfg.vocab_size, size=rng.integers(4, 12)).tolist()
-        engine.submit(prompt, max_new=args.max_new, request_id=i)
+        reqs.append(dict(prompt=prompt, max_new=args.max_new, request_id=i))
     t0 = time.time()
-    done = engine.run_until_drained()
+    if args.stream_gap_ms > 0:
+        offs = np.cumsum(rng.exponential(args.stream_gap_ms / 1e3,
+                                         size=args.requests))
+        done, rejected = engine.run_stream(
+            [(float(t), kw) for t, kw in zip(offs, reqs)])
+        if rejected:
+            print(f"rejected at admission (queue_limit="
+                  f"{args.queue_limit}): {rejected}")
+    else:
+        for kw in reqs:
+            engine.submit(**kw)
+        done = engine.run_until_drained()
     dt = time.time() - t0
     total_tokens = sum(len(d["tokens"]) for d in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
@@ -80,6 +105,13 @@ def main() -> None:
           f"mode={engine.mode}, paged={engine.paged}, "
           f"buckets={engine.chunk_buckets})")
     print(engine.stats_summary())
+    if args.stream_gap_ms > 0:
+        m = engine.serving_metrics()
+        print(f"ttft p50/p99 = {m['ttft_p50_ms']}/{m['ttft_p99_ms']} ms, "
+              f"tpot p50/p99 = {m['tpot_p50_ms']}/{m['tpot_p99_ms']} ms, "
+              f"queue_peak={m['queue_peak']} preempt={m['preemptions']} "
+              f"swap_pages={m['swap_out_pages']}/{m['swap_in_pages']} "
+              f"rejected={m['rejected']}")
 
 
 if __name__ == "__main__":

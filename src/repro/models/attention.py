@@ -169,6 +169,43 @@ def _read_paged(cache: dict, dtype):
     return k.astype(dtype).reshape(shape), v.astype(dtype).reshape(shape), kpos
 
 
+_PAGE_KEYS = ("pk", "pv", "pks", "pvs", "ppos")
+
+
+def _page_axis(cache: dict) -> int:
+    """Page axis of a paged cache's leaves: 0 for a single layer's cache
+    ((n_pages, ps)), 1 for the engine's period-stacked state leaves
+    ((P, n_pages, ps))."""
+    return 0 if cache["ppos"].ndim == 2 else 1
+
+
+def gather_pages(cache: dict, page_ids):
+    """Pull whole pages' payloads off the arena — the device side of KV
+    swap-OUT.  Returns ``{pk, pv[, pks, pvs], ppos}`` sliced to
+    ``page_ids`` along the page axis; pure data movement (no dequant, no
+    cast), so a gather → scatter_pages round trip is bit-identical
+    whatever physical pages the content comes back to."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    ax = _page_axis(cache)
+    return {k: jnp.take(cache[k], idx, axis=ax)
+            for k in _PAGE_KEYS if k in cache}
+
+
+def scatter_pages(cache: dict, page_ids, payload: dict) -> dict:
+    """Write gathered page payloads back into (possibly DIFFERENT)
+    physical pages — the device side of swap-IN page rebind.  Positional
+    content travels with the page (``ppos`` is absolute), so only the
+    page table needs to name the new physical ids.  Out-of-bounds ids in
+    ``page_ids`` are padding: the scatter drops them (jnp ``.at``
+    default under jit), letting the engine pad to one static shape."""
+    cache = dict(cache)
+    ax = _page_axis(cache)
+    for k, v in payload.items():
+        at = cache[k].at[page_ids] if ax == 0 else cache[k].at[:, page_ids]
+        cache[k] = at.set(v)
+    return cache
+
+
 def _write_cache(cache: dict, k, v, positions):
     """Write k/v (B,T,Hkv,D) at ring slots positions % S.
 

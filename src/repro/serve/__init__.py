@@ -6,4 +6,5 @@ from .engine import (  # noqa: F401
     packed_step,
     prefill_step,
 )
-from .kv_pool import PagedKVPool  # noqa: F401
+from .kv_pool import PagedKVPool, PoolExhaustedError  # noqa: F401
+from .queue import AdmissionQueue, QueueFullError  # noqa: F401

@@ -27,6 +27,24 @@ prompt length); sliding-window ring caches are widened by the largest
 bucket (init_states ``window_slack``) so a chunk write never evicts
 in-window keys.
 
+The FRONT END around that scheduler keeps serving correct and bounded
+under any arrival pattern (serve/queue.py, docs/serving.md): ``submit``
+validates at the door and feeds a priority ``AdmissionQueue`` whose
+optional bound rejects overload with ``QueueFullError`` (explicit
+backpressure — never a silent drop, never an allocator crash);
+``step`` runs admit → maybe-preempt → pack → forward → commit →
+complete.  Under paged-pool memory pressure the maybe-preempt stage
+picks a victim lane (lowest priority, then shortest progress), swaps its
+KV pages to HOST memory (``kv_pool.swap_out`` + ``gather_pages``), and
+resumes it later into fresh physical pages (``swap_in`` +
+``scatter_pages``) — a bit-exact round trip, so preempted-then-resumed
+requests produce exactly the tokens of an uninterrupted run (greedy and
+sampled; tokens are keyed by submission id and position, never by
+scheduling).  TTFT/TPOT percentiles, per-request SLO misses, queue
+depth, and preemption/swap/rejection counters live in ``stats`` /
+``serving_metrics`` — the clock is read only for measurement, never for
+scheduling.
+
 Fallback schedules over the SAME program family:
 
 * ``token_budget=0, prefill_chunk>0`` — chunked mode: prefill chunks and
@@ -68,7 +86,9 @@ bypasses).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -76,7 +96,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import ArchConfig, forward, init_states, precompute_cross_states
-from .kv_pool import PagedKVPool
+from ..models.attention import gather_pages, scatter_pages
+from .kv_pool import PagedKVPool, PoolExhaustedError
+from .queue import AdmissionQueue, QueueFullError, percentile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +114,8 @@ class ServeConfig:
     paged: bool = False          # paged KV pool + shared-prefix reuse
     page_size: int = 16          # KV page slots (demoted to divide max_seq)
     pool_pages: int = 0          # physical pages; 0 = auto-size
+    queue_limit: int = 0         # admission-queue bound; 0 = unbounded
+    swap: bool = True            # preempt + swap KV pages under pressure
 
 
 def packed_step(params, cfg: ArchConfig, tokens, positions, states,
@@ -168,6 +192,17 @@ def _paged_copy(states, src, dst, keep):
     return _paged_states_map(states, cp)
 
 
+def _paged_swap_in(states, idx, payloads):
+    """Scatter swapped-out page payloads back into freshly allocated
+    physical pages.  ``idx`` (MP,) int32 is padded with out-of-bounds ids
+    (dropped by the scatter) so there is exactly ONE compiled program;
+    ``payloads`` carries one payload dict per paged state, in state-tree
+    order (the same order the engine's gather walked)."""
+    it = iter(payloads)
+    return _paged_states_map(
+        states, lambda kv: scatter_pages(kv, idx, next(it)))
+
+
 def _with_page_table(states, pt):
     """Swap the page-table leaf ((P, B, MP), identical across periods) in
     every paged cache for the host scheduler's current mapping."""
@@ -225,8 +260,14 @@ class ServingEngine:
             while serve_cfg.max_seq % ps:
                 ps -= 1
             mp = serve_cfg.max_seq // ps
+            # explicit pool_pages may be tiny (overload testing): clamp to
+            # one lane's worst case + null + spare so a LONE resident lane
+            # always completes — that floor is what makes preemption a
+            # guaranteed-progress policy rather than a livelock
             n_pages = serve_cfg.pool_pages or (b + 2) * mp + 1
+            n_pages = max(n_pages, mp + 2)
             self.pool = PagedKVPool(n_pages, ps, b, mp)
+            self._swap_in_fn = jax.jit(_paged_swap_in, donate_argnums=(0,))
             # all attention layers windowed -> the scheduler can cap each
             # lane's LIVE pages at the window (full-attn layers would still
             # need the old keys, so mixed patterns keep everything)
@@ -281,9 +322,13 @@ class ServingEngine:
         self.lane_request: list[Any] = [None] * b
         self.lane_keys = jnp.zeros((b, 2), jnp.uint32)
         self.base_key = jax.random.PRNGKey(serve_cfg.seed)
-        self.queue: list[dict] = []
+        self.queue = AdmissionQueue(serve_cfg.queue_limit)
+        self.preempted: list[dict] = []   # swapped-out, waiting to resume
         self.finished: list[dict] = []
         self._submitted = 0
+        # injectable for tests; read ONLY for latency measurement — no
+        # scheduling decision depends on the clock
+        self._clock = time.monotonic
         self.stats: dict[str, Any] = {}
         self.reset_stats()
 
@@ -421,15 +466,22 @@ class ServingEngine:
         TOP of the uint32 fold range (-1 - bucket mod 2^32 — fold_in
         coerces to uint32, so real submission ids counting up from 0 can
         never collide) — never touches ``_submitted``."""
-        self.queue.append({"prompt": list(prompt), "max_new": 2,
-                           "id": f"_warmup{bucket}", "generated": [],
-                           "_seq": 2 ** 32 - 1 - bucket})
+        self.queue.push({"prompt": list(prompt), "max_new": 2,
+                         "id": f"_warmup{bucket}", "generated": [],
+                         "_seq": 2 ** 32 - 1 - bucket, "priority": 0,
+                         "t_submit": self._clock()})
 
     def reset_stats(self) -> None:
         self.stats = {
             "requests": 0, "steps": 0, "forwards": {},
             "prompt_tokens": 0, "decode_tokens": 0, "pad_tokens": 0,
             "budget_tokens": 0, "prefix_len_hist": {},
+            # continuous-batching front end (see docs/serving.md glossary)
+            "queue_peak": 0, "rejected": 0,
+            "preemptions": 0, "resumes": 0, "preempted_requests": [],
+            "swap_out_pages": 0, "swap_in_pages": 0,
+            "ttft_ms": [], "tpot_ms": [],
+            "slo_ttft_miss": 0, "slo_tpot_miss": 0,
         }
         if self._paged:
             # prefix-hit / COW / eviction counters live in pool.stats (one
@@ -437,21 +489,76 @@ class ServingEngine:
             self.pool.reset_stats()
 
     # -- API -------------------------------------------------------------
-    def submit(self, prompt: list[int], max_new: int = 32, request_id=None):
-        self.queue.append({"prompt": list(prompt), "max_new": max_new,
-                           "id": request_id, "generated": [],
-                           "_seq": self._submitted})
+    def submit(self, prompt: list[int], max_new: int = 32, request_id=None,
+               *, priority: int = 0, ttft_slo_ms: float | None = None,
+               tpot_slo_ms: float | None = None, on_token=None):
+        """Queue one request for continuous serving.
+
+        ``priority``: higher admits (and survives memory pressure) first;
+        equal priorities keep submission order.  ``ttft_slo_ms`` /
+        ``tpot_slo_ms``: per-request latency targets — bookkeeping only
+        (misses are counted in stats), never a scheduling input.
+        ``on_token(request_id, token)`` streams tokens as they commit.
+
+        Invalid requests fail HERE with ``ValueError`` — an empty prompt
+        has nothing to prefill, and a prompt of ``max_seq - max_new`` or
+        longer cannot fit its decode budget — instead of surfacing as a
+        shape/PRNG failure mid-step.  A full bounded queue
+        (``ServeConfig.queue_limit``) raises ``QueueFullError``: overload
+        is explicit rejection, never a silent drop."""
+        n = len(prompt)
+        if n == 0:
+            raise ValueError("empty prompt: nothing to prefill (submit at "
+                             "least one token)")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if n >= self.scfg.max_seq - max_new:
+            raise ValueError(
+                f"prompt of {n} tokens cannot fit max_new={max_new} within "
+                f"max_seq={self.scfg.max_seq}: need "
+                f"len(prompt) < max_seq - max_new")
+        req = {"prompt": list(prompt), "max_new": max_new,
+               "id": request_id, "generated": [],
+               "_seq": self._submitted, "priority": int(priority),
+               "ttft_slo_ms": ttft_slo_ms, "tpot_slo_ms": tpot_slo_ms,
+               "on_token": on_token, "t_submit": self._clock()}
+        try:
+            self.queue.push(req)
+        except QueueFullError:
+            self.stats["rejected"] += 1
+            raise
         self._submitted += 1
         self.stats["requests"] += 1
+        self.stats["queue_peak"] = max(self.stats["queue_peak"],
+                                       len(self.queue))
         h = self.stats["prefix_len_hist"]
         bucket = _pow2_bucket(max(len(prompt), 1))
         h[bucket] = h.get(bucket, 0) + 1
 
     def _admit(self) -> None:
+        """Fill free lanes: preempted requests resume FIRST (highest
+        priority, then oldest — they already paid for their progress and
+        their KV sits in the host swap buffer), then the priority queue.
+        A resume blocked on pool capacity HOLDS its lane rather than
+        letting new work jump past a half-served request; in paged mode a
+        new request is only admitted while the pool has any headroom
+        (free or evictable pages) — under pressure the queue is the
+        backpressure, not the allocator."""
         for lane in range(self.scfg.batch_lanes):
-            if self.lane_active[lane] or not self.queue:
+            if self.lane_active[lane]:
                 continue
-            req = self.queue.pop(0)
+            if self.preempted:
+                req = min(self.preempted,
+                          key=lambda r: (-r["priority"], r["_seq"]))
+                if not self._try_resume(lane, req):
+                    return
+                continue
+            if not self.queue:
+                return
+            if (self._paged and
+                    self.pool.free_pages + self.pool.evictable_pages < 2):
+                return
+            req = self.queue.pop()
             if self._paged:
                 # lane isolation = page bookkeeping: the previous request's
                 # pages were freed (and cleared) at finish; here the radix
@@ -472,10 +579,150 @@ class ServingEngine:
             self.lane_keys = self.lane_keys.at[lane].set(
                 jax.random.fold_in(self.base_key, req["_seq"]))
 
+    # -- preemption + KV page swap ----------------------------------------
+    def _gather_pages_host(self, pids: list[int]) -> list[dict]:
+        """Swap-out, device side: copy the pages' payloads (K/V, scales,
+        position ids) into HOST memory — one payload dict per paged
+        state, in state-tree order.  Must run BEFORE the release actions
+        clear the pages."""
+        idx = jnp.asarray(np.asarray(pids, np.int32))
+        out = []
+        for st in self.states:
+            if isinstance(st, dict) and "kv" in st and "ppos" in st["kv"]:
+                out.append(jax.device_get(gather_pages(st["kv"], idx)))
+        return out
+
+    def _scatter_pages_device(self, pids: list[int],
+                              payloads: list[dict]) -> None:
+        """Swap-in, device side: one jitted scatter of the saved payloads
+        into the freshly allocated pages, padded to the per-lane page
+        budget (pad ids are out of bounds → dropped) so every resume hits
+        the SAME compiled program."""
+        mp = self.pool.mp
+        idx = np.full(mp, self.pool.n, np.int32)
+        idx[:len(pids)] = pids
+        padded = []
+        for payload in payloads:
+            d = {}
+            for k, v in payload.items():
+                ax = v.ndim - 2 if k == "ppos" else v.ndim - 4
+                if v.shape[ax] < mp:
+                    pad = [(0, 0)] * v.ndim
+                    pad[ax] = (0, mp - v.shape[ax])
+                    v = np.pad(v, pad)
+                d[k] = v
+            padded.append(d)
+        self.states = self._swap_in_fn(self.states, jnp.asarray(idx), padded)
+
+    def _preempt_lane(self, lane: int) -> None:
+        """Victim selected: swap the lane's KV pages to host memory and
+        free the lane.  The request keeps its position counter, pending
+        prompt, and generated tokens — its PRNG stream is keyed by
+        submission id, so the eventual resume produces bit-identical
+        tokens to an uninterrupted run."""
+        req = self.lane_request[lane]
+        mapped, actions = self.pool.swap_out(lane)
+        js = [j for j, _ in mapped]
+        payloads = self._gather_pages_host([p for _, p in mapped]) if js \
+            else []
+        self._apply_pool_actions(actions)
+        req["_swap"] = (js, payloads)
+        req["_lane_pos"] = int(self.lane_pos[lane])
+        self.lane_active[lane] = False
+        self.lane_request[lane] = None
+        self.preempted.append(req)
+        st = self.stats
+        st["preemptions"] += 1
+        st["swap_out_pages"] += len(js)
+        st["preempted_requests"].append(req["id"])
+
+    def _try_resume(self, lane: int, req: dict) -> bool:
+        """Swap a preempted request back in: rebind its logical pages to
+        fresh physical pages, scatter the saved payload, restore the
+        lane's counters and PRNG stream.  False (and no state change)
+        when the pool cannot host it yet."""
+        js, payloads = req["_swap"]
+        try:
+            pids, actions = self.pool.swap_in(lane, js)
+        except PoolExhaustedError as e:
+            self._apply_pool_actions(e.actions)
+            return False
+        self._apply_pool_actions(actions)
+        if js:
+            self._scatter_pages_device(pids, payloads)
+        del req["_swap"]
+        self.preempted.remove(req)
+        self.lane_pos[lane] = req.pop("_lane_pos")
+        self.lane_request[lane] = req
+        self.lane_active[lane] = True
+        self.lane_keys = self.lane_keys.at[lane].set(
+            jax.random.fold_in(self.base_key, req["_seq"]))
+        self.stats["resumes"] += 1
+        self.stats["swap_in_pages"] += len(js)
+        return True
+
+    def _reserve_pages(self, plan: dict[int, int]) -> bool:
+        """The maybe-preempt stage: back every planned span with
+        lane-owned physical pages.  When the pool cannot, preempt a
+        victim — lowest priority first, then shortest progress (least
+        sunk cost), then lane index — swap its pages out, drop it from
+        the plan, and retry with the survivors.  Each retry removes one
+        active lane, and a lone lane always fits (pool >= mp + 2 pages),
+        so this terminates with forward progress.  Mutates ``plan``;
+        returns False when nothing is left to run this iteration."""
+        while True:
+            try:
+                for lane in sorted(plan):
+                    p0 = int(self.lane_pos[lane])
+                    self._apply_pool_actions(
+                        self.pool.ensure_writable(lane, p0, plan[lane]))
+                    if self._cap_window:
+                        self._apply_pool_actions(
+                            self.pool.cap_window(lane, p0, self._cap_window))
+                return bool(plan)
+            except PoolExhaustedError as e:
+                self._apply_pool_actions(e.actions)
+                victims = [l for l in range(self.scfg.batch_lanes)
+                           if self.lane_active[l]]
+                if len(victims) <= 1 or not self.scfg.swap:
+                    raise   # lone lanes always fit; swap off -> surface it
+                victim = min(victims, key=lambda l: (
+                    self.lane_request[l]["priority"],
+                    int(self.lane_pos[l]), l))
+                self._preempt_lane(victim)
+                plan.pop(victim, None)
+
+    def _emit(self, req: dict, tok: int) -> None:
+        """Commit one generated token: record first-token latency, stream
+        it to the request's callback if any."""
+        req["generated"].append(tok)
+        if "t_first" not in req:
+            req["t_first"] = self._clock()
+        cb = req.get("on_token")
+        if cb is not None:
+            cb(req["id"], tok)
+
     def _finish_lane(self, lane: int) -> None:
         req = self.lane_request[lane]
-        self.finished.append({"id": req["id"], "prompt": req["prompt"],
-                              "tokens": req["generated"]})
+        rec = {"id": req["id"], "prompt": req["prompt"],
+               "tokens": req["generated"]}
+        if "t_first" in req:
+            st = self.stats
+            ttft = (req["t_first"] - req["t_submit"]) * 1e3
+            st["ttft_ms"].append(ttft)
+            rec["ttft_ms"] = ttft
+            if (req.get("ttft_slo_ms") is not None
+                    and ttft > req["ttft_slo_ms"]):
+                st["slo_ttft_miss"] += 1
+            n = len(req["generated"])
+            if n > 1:
+                tpot = (self._clock() - req["t_first"]) * 1e3 / (n - 1)
+                st["tpot_ms"].append(tpot)
+                rec["tpot_ms"] = tpot
+                if (req.get("tpot_slo_ms") is not None
+                        and tpot > req["tpot_slo_ms"]):
+                    st["slo_tpot_miss"] += 1
+        self.finished.append(rec)
         self.lane_active[lane] = False
         self.lane_request[lane] = None
         if self._paged:
@@ -539,16 +786,11 @@ class ServingEngine:
         b = self.scfg.batch_lanes
         if self._paged:
             # back every logical page this step writes with a lane-owned
-            # physical page (alloc / copy-on-write), cap windowed lanes'
-            # live pages, then ship the updated page table
-            actions = []
-            for lane, c in plan.items():
-                p0 = int(self.lane_pos[lane])
-                actions += self.pool.ensure_writable(lane, p0, c)
-                if self._cap_window:
-                    actions += self.pool.cap_window(lane, p0,
-                                                    self._cap_window)
-            self._apply_pool_actions(actions)
+            # physical page (alloc / copy-on-write), preempting victims
+            # under memory pressure, cap windowed lanes' live pages, then
+            # ship the updated page table
+            if not self._reserve_pages(plan):
+                return
             self.states = _with_page_table(self.states,
                                            jnp.asarray(self.pool.table))
         need = max(plan.values())
@@ -596,22 +838,24 @@ class ServingEngine:
                 if not req["_pending_prompt"]:
                     # boundary token: sampled from the last prompt logit,
                     # key folded at the last prompt position (= decode rule)
-                    req["generated"].append(int(nxt[lane]))
+                    self._emit(req, int(nxt[lane]))
                     if self._paged:
                         # prompt fully in cache: register its pages in the
                         # radix index so later submissions can share them
                         self.pool.register_prompt(lane, req["prompt"])
             else:
-                req["generated"].append(int(nxt[lane]))
+                self._emit(req, int(nxt[lane]))
             self._check_done(lane)
 
     # -- scheduler --------------------------------------------------------
     def step(self) -> None:
-        """One engine iteration.  Packed mode: ONE forward mixing prefill
-        chunk tokens and decode tokens under ``token_budget`` — no
-        prefill/decode phase split.  Chunked mode: the PR 2 two-call
-        schedule (prefill chunk, then decode) over the same program family.
-        Tokenwise: single-token rows for every lane."""
+        """One engine iteration: admit (resumes first) → maybe-preempt
+        (inside ``_reserve_pages``) → pack → forward → commit → complete.
+        Packed mode: ONE forward mixing prefill chunk tokens and decode
+        tokens under ``token_budget`` — no prefill/decode phase split.
+        Chunked mode: the PR 2 two-call schedule (prefill chunk, then
+        decode) over the same program family.  Tokenwise: single-token
+        rows for every lane."""
         self._admit()
         if not self.lane_active.any():
             return
@@ -639,10 +883,64 @@ class ServingEngine:
 
     def run_until_drained(self, max_iters: int = 10_000) -> list[dict]:
         it = 0
-        while (self.queue or self.lane_active.any()) and it < max_iters:
+        while (self.queue or self.preempted
+               or self.lane_active.any()) and it < max_iters:
             self.step()
             it += 1
         return self.finished
+
+    def run_stream(self, schedule, max_iters: int = 1_000_000):
+        """Continuous serving against a TIMED arrival schedule.
+
+        ``schedule`` is ``[(offset_s, submit_kwargs), ...]``: each request
+        is submitted — in schedule order — once the wall clock passes its
+        offset, with engine iterations running in between (the async
+        front end, driven synchronously).  Timing never changes tokens:
+        submission ORDER alone keys the PRNG streams, so a streamed drain
+        is bit-identical to an offline drain of the same schedule.
+        Bounded-queue rejections are collected (as request ids), not
+        raised — overload sheds load explicitly while the drain keeps
+        going.  Returns ``(finished, rejected_ids)``."""
+        pending = collections.deque(schedule)
+        t0 = self._clock()
+        rejected = []
+        it = 0
+        while (pending or self.queue or self.preempted
+               or self.lane_active.any()) and it < max_iters:
+            while pending and self._clock() - t0 >= pending[0][0]:
+                _, kw = pending.popleft()
+                try:
+                    self.submit(**kw)
+                except QueueFullError:
+                    rejected.append(kw.get("request_id"))
+            if (pending and not self.queue and not self.preempted
+                    and not self.lane_active.any()):
+                # idle gap before the next arrival: don't spin flat out
+                time.sleep(min(max(
+                    pending[0][0] - (self._clock() - t0), 0.0), 0.001))
+            self.step()
+            it += 1
+        return self.finished, rejected
+
+    def serving_metrics(self) -> dict:
+        """TTFT/TPOT percentiles + overload counters for the current
+        stats window (see docs/serving.md for the field glossary)."""
+        st = self.stats
+        return {
+            "completed": len(st["ttft_ms"]),
+            "ttft_p50_ms": round(percentile(st["ttft_ms"], 50), 3),
+            "ttft_p99_ms": round(percentile(st["ttft_ms"], 99), 3),
+            "tpot_p50_ms": round(percentile(st["tpot_ms"], 50), 3),
+            "tpot_p99_ms": round(percentile(st["tpot_ms"], 99), 3),
+            "queue_peak": st["queue_peak"],
+            "rejected": st["rejected"],
+            "preemptions": st["preemptions"],
+            "resumes": st["resumes"],
+            "swap_out_pages": st["swap_out_pages"],
+            "swap_in_pages": st["swap_in_pages"],
+            "slo_ttft_miss": st["slo_ttft_miss"],
+            "slo_tpot_miss": st["slo_tpot_miss"],
+        }
 
     def stats_summary(self) -> str:
         st = self.stats
@@ -668,4 +966,15 @@ class ServingEngine:
                     f" cow={ps['cow_copies']} evict={ps['evictions']}"
                     f" pages_peak={ps['pages_peak']}"
                     f" tree_pages={self.pool.tree_pages}]")
+        m = self.serving_metrics()
+        if m["completed"]:
+            out += (f" ttft_p50/p99={m['ttft_p50_ms']:.1f}/"
+                    f"{m['ttft_p99_ms']:.1f}ms tpot_p50/p99="
+                    f"{m['tpot_p50_ms']:.2f}/{m['tpot_p99_ms']:.2f}ms")
+        if m["preemptions"] or m["rejected"]:
+            out += (f" overload[preempt={m['preemptions']}"
+                    f" resume={m['resumes']} swap_pages="
+                    f"{m['swap_out_pages']}/{m['swap_in_pages']}"
+                    f" rejected={m['rejected']}"
+                    f" queue_peak={m['queue_peak']}]")
         return out

@@ -33,20 +33,51 @@ Sharing model (vLLM/SGLang-style radix cache at page granularity):
 * The tree itself holds pages independently of lane refcounts; a page is
   freed only when no lane references it AND no tree node names it.  When
   the free list runs dry, least-recently-hit leaf nodes are evicted until
-  a page frees (pool sizing guarantees success: live lane mappings can
-  never exceed ``lanes * pages_per_lane``).
+  a page frees; when every page is lane-held the allocation raises
+  ``PoolExhaustedError`` for the engine's preemption path to handle.
 
 Exactness: sharing never changes values — a shared page holds exactly the
 K/V a dense engine would recompute for the same prefix at the same
 absolute positions, so the paged engine's outputs are bit-identical to the
 dense engine's (enforced by tests/test_system.py and
 scripts/paged_equiv_smoke.py).
+
+Overload is a POLICY, not a crash: when neither the free list nor the
+prefix index can supply a page, allocation raises ``PoolExhaustedError``
+— typed, recoverable, bookkeeping left consistent — and the serving
+engine answers with lane preemption: ``swap_out`` hands back the lane's
+(logical, physical) mapping and releases it (the engine copies the page
+payloads to host memory first), ``swap_in`` later rebinds the same
+logical pages to fresh physical pages for the engine to scatter the
+saved payload into.  The round trip is pure data movement — bit-identical
+KV, any physical placement.  Pools may be sized far below the worst-case
+``lanes * pages_per_lane`` (only one lane's worth + 2 is required);
+admission control and preemption manage the rest.
 """
 from __future__ import annotations
 
 import numpy as np
 
 Action = tuple  # ("clear", pid) | ("copy", src, dst, keep)
+
+
+class PoolExhaustedError(RuntimeError):
+    """Typed, RECOVERABLE allocation failure: the arena has no free page
+    and no evictable tree leaf (every page is lane-held).
+
+    Carries ``actions`` — the device actions accumulated before the
+    failure (evictions that DID free pages still need their clears
+    applied).  Pool bookkeeping stays consistent: after the caller
+    applies ``actions``, every ``check()`` invariant holds, no page is
+    leaked, and every lane's mapping is exactly what it was plus any
+    pages the failing call managed to map (re-running the call is
+    idempotent for those).  The serving engine treats this as memory
+    pressure — preempt a lane and retry — never as a crash."""
+
+    def __init__(self, actions, msg: str = "page pool exhausted: "
+                 "no free page and no evictable tree leaf"):
+        super().__init__(msg)
+        self.actions: list[Action] = list(actions)
 
 
 class _Node:
@@ -82,8 +113,14 @@ class PagedKVPool:
 
     def __init__(self, n_pages: int, page_size: int, lanes: int,
                  pages_per_lane: int):
-        assert n_pages >= lanes * pages_per_lane + 2, (
-            "pool must out-size worst-case live lane mappings + 1 spare",
+        # one lane's worst-case mapping + the null page + 1 spare: enough
+        # that a LONE resident lane always completes, which is what makes
+        # preemption a guaranteed-progress policy (preempted lanes hold
+        # zero pages).  Pools smaller than every lane's combined worst
+        # case are legal — admission control + preemption manage the
+        # concurrency, raising PoolExhaustedError instead of corrupting.
+        assert n_pages >= pages_per_lane + 2, (
+            "pool must out-size one lane's worst-case mapping + 1 spare",
             n_pages, lanes, pages_per_lane)
         self.n = n_pages
         self.ps = page_size
@@ -102,7 +139,8 @@ class PagedKVPool:
     # -- stats ------------------------------------------------------------
     def reset_stats(self) -> None:
         self.stats = {"prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "cow_copies": 0, "evictions": 0, "pages_peak": 0}
+                      "cow_copies": 0, "evictions": 0, "pages_peak": 0,
+                      "swap_outs": 0, "swap_ins": 0}
 
     @property
     def free_pages(self) -> int:
@@ -111,6 +149,15 @@ class PagedKVPool:
     @property
     def tree_pages(self) -> int:
         return len(self._node_of_page)
+
+    @property
+    def evictable_pages(self) -> int:
+        """Tree-held pages no lane references: what eviction can reclaim
+        (leaf by leaf — a held chain frees bottom-up, so the COUNT is
+        reachable even when individual nodes aren't leaves yet).  The
+        engine's admission control reads ``free_pages + evictable_pages``
+        as the pool's real headroom."""
+        return sum(1 for pid in self._node_of_page if self.ref[pid] == 0)
 
     # -- allocation core --------------------------------------------------
     def _tick(self) -> int:
@@ -152,7 +199,10 @@ class PagedKVPool:
             if victim is None or node.stamp < victim.stamp:
                 victim = node
         if victim is None:
-            raise RuntimeError("page pool exhausted: no evictable tree leaf")
+            # typed + recoverable: carries the clears of any pages earlier
+            # eviction rounds in this batch DID free (the caller must
+            # still apply them); bookkeeping is left fully consistent
+            raise PoolExhaustedError(actions)
         self._drop_node(victim, actions)
         self.stats["evictions"] += 1
         if not self._free:
@@ -217,7 +267,7 @@ class PagedKVPool:
             # page itself) rather than corrupt or crash.
             try:
                 dst = self._alloc(actions, protect=best.page)
-            except RuntimeError:
+            except PoolExhaustedError:
                 break
             actions.append(("copy", best.page, dst, best_m))
             self.table[lane, j] = dst
@@ -229,6 +279,54 @@ class PagedKVPool:
             self.stats["prefix_hits"] += 1
             self.stats["prefix_hit_tokens"] += depth
         return depth, actions
+
+    # -- preemption: swap-out / swap-in ----------------------------------
+    def swap_out(self, lane: int) -> tuple[list[tuple[int, int]], list[Action]]:
+        """Preemption, host side: return the lane's mapped ``(logical_j,
+        physical_pid)`` pairs in logical order, then release every lane
+        reference (same bookkeeping as ``lane_release``).
+
+        ORDERING CONTRACT: the engine must READ the returned pages'
+        payloads off the device arena BEFORE applying the returned
+        actions — the release clears any page nothing else holds.  Pages
+        the tree (or a co-sharing lane) still references survive
+        untouched, but the swap payload carries their content anyway, so
+        swap-in restores the lane as owned copies and never depends on
+        what sharing outlived the preemption."""
+        mapped = [(j, int(self.table[lane, j])) for j in range(self.mp)
+                  if self.table[lane, j]]
+        self.stats["swap_outs"] += 1
+        return mapped, self.lane_release(lane)
+
+    def swap_in(self, lane: int, js: list[int]
+                ) -> tuple[list[int], list[Action]]:
+        """Resume, host side: back every logical page index in ``js`` with
+        a FRESH physical page (the rebind — swapped content comes back to
+        DIFFERENT physical pages; the engine scatters the saved payload
+        into the returned pids, in ``js`` order).
+
+        Transactional: if the pool cannot supply every page, all pages
+        mapped so far are released again and ``PoolExhaustedError``
+        carries the combined actions — the lane is left exactly as it
+        was (unmapped), so the engine retries on a later iteration.
+        Recoverable backpressure, not a crash."""
+        assert not self.table[lane].any(), ("swap_in on a mapped lane", lane)
+        actions: list[Action] = []
+        got: list[int] = []
+        try:
+            for j in js:
+                pid = self._alloc(actions)
+                self.table[lane, j] = pid
+                self.ref[pid] += 1
+                got.append(pid)
+        except PoolExhaustedError:
+            for j, pid in zip(js, got):
+                self.table[lane, j] = 0
+                self._release_page(pid, actions)
+            raise PoolExhaustedError(
+                actions, "swap_in: pool cannot host the resumed lane yet")
+        self.stats["swap_ins"] += 1
+        return got, actions
 
     def ensure_writable(self, lane: int, pos0: int, count: int) -> list[Action]:
         """Back every logical page the span [pos0, pos0+count) writes into

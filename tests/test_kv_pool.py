@@ -11,7 +11,7 @@ surface in another lane's view without an intervening clear or COW.
 import numpy as np
 import pytest
 
-from repro.serve.kv_pool import PagedKVPool
+from repro.serve.kv_pool import PagedKVPool, PoolExhaustedError
 
 
 def _mk(lanes=3, mp=4, ps=4, extra=None):
@@ -170,6 +170,78 @@ class TestPoolBasics:
             pool._free.append(pid)
         pool.check()
 
+    def test_exhaustion_is_typed_recoverable_and_leak_free(self):
+        """Filling the arena past capacity raises PoolExhaustedError (not
+        a bare crash), leaks no pages, and leaves every lane's mapping
+        intact: the contract the engine's preemption path builds on.
+        Pre-tentpole pin: the error's ``actions`` carry any clears from
+        evictions that DID happen, so the device arena never holds stale
+        position ids on a freed page."""
+        pool = PagedKVPool(6, 4, 2, 4)     # 5 usable pages, mp=4
+        arena = _ShadowArena(pool)
+        arena.apply(pool.ensure_writable(0, 0, 16))   # lane 0: 4 pages
+        arena.write(0, 0, 16, req_tag=1)
+        with pytest.raises(PoolExhaustedError) as ei:
+            pool.ensure_writable(1, 0, 8)  # needs 2, only 1 free
+        arena.apply(ei.value.actions)
+        pool.check()                       # bookkeeping fully consistent
+        # lane 1 kept whatever it managed to map; retrying after lane 0
+        # frees is clean (recoverable, idempotent)
+        arena.apply(pool.lane_release(0))
+        arena.apply(pool.ensure_writable(1, 0, 8))
+        arena.write(1, 0, 8, req_tag=2)
+        assert arena.view_tags(1, 8) == [2] * 8   # no stale lane-0 data
+        arena.apply(pool.lane_release(1))
+        arena.apply(pool.flush_tree())
+        pool.check()
+        assert pool.free_pages == pool.n - 1      # zero leaked pages
+
+    def test_swap_roundtrip_restores_view_and_refcounts(self):
+        """swap_out hands back the (logical, physical) mapping and fully
+        releases the lane; swap_in rebinds the same logical pages to fresh
+        physical pages.  Replaying the saved payload must restore the
+        lane's exact pre-swap view even though the physical ids moved."""
+        pool = _mk()
+        arena = _ShadowArena(pool)
+        prompt = list(range(100, 110))
+        arena.apply(pool.ensure_writable(0, 0, 13))
+        arena.write(0, 0, 13, req_tag=7)
+        pool.register_prompt(0, prompt)           # pages 0-1 tree-held
+        before = arena.view_tags(0, 13)
+        mapped, actions = pool.swap_out(0)
+        # payload captured BEFORE the release actions clear anything
+        payload = {j: arena.tag[pid].copy() for j, pid in mapped}
+        arena.apply(actions)
+        pool.check()
+        assert not pool.table[0].any()            # lane fully released
+        assert [j for j, _ in mapped] == [0, 1, 2, 3]
+        pids, actions = pool.swap_in(1, [j for j, _ in mapped])
+        arena.apply(actions)
+        for (j, _), pid in zip(mapped, pids):
+            arena.tag[pid] = payload[j]           # engine's scatter
+        pool.check()
+        assert arena.view_tags(1, 13) == before   # bit-identical view
+        assert all(pool.ref[p] == 1 for p in pids)
+        arena.apply(pool.lane_release(1))
+        arena.apply(pool.flush_tree())
+        pool.check()
+        assert pool.free_pages == pool.n - 1
+
+    def test_swap_in_rolls_back_on_exhaustion(self):
+        """A swap_in the pool cannot host must be transactional: no
+        partial mapping survives, the error is typed, and a later retry
+        (after space frees) succeeds."""
+        pool = PagedKVPool(6, 4, 2, 4)
+        pool.ensure_writable(0, 0, 16)            # lane 0 holds 4 of 5
+        with pytest.raises(PoolExhaustedError):
+            pool.swap_in(1, [0, 1, 2])            # needs 3, only 1 free
+        pool.check()
+        assert not pool.table[1].any()            # rollback complete
+        pool.lane_release(0)
+        pids, _ = pool.swap_in(1, [0, 1, 2])      # retry succeeds
+        assert len(pids) == 3 and not pool.table[0].any()
+        pool.check()
+
     def test_window_cap_unmaps_behind_window(self):
         pool = _mk(lanes=1, mp=8, ps=4, extra=2)
         pool.ensure_writable(0, 0, 20)       # pages 0..4 mapped
@@ -183,8 +255,12 @@ class TestPoolBasics:
 
 class TestPoolFuzz:
     """Random engine-shaped traffic against the invariant checker and the
-    shadow arena: submit (admit + incremental writes + register), finish,
-    reset, window caps — across 3 seeds x 200 ops."""
+    shadow arena: submit (admit + incremental writes + register), step,
+    finish, tree flushes, plus preempt (swap-out) / resume (swap-in) with
+    a modeled host swap buffer — across 3 seeds x 200 ops.  A resumed
+    lane's view must be tag-for-tag its pre-swap view even though every
+    physical page moved, and COW sources registered in the tree must
+    survive swap churn untouched."""
 
     @pytest.mark.parametrize("seed", [0, 1, 2])
     def test_random_lifecycle_no_leaks_no_cross_lane_reads(self, seed):
@@ -195,6 +271,7 @@ class TestPoolFuzz:
         max_seq = mp * ps
         lane_req = [None] * lanes   # (req_tag, prompt, pos, shared)
         next_tag = [1]
+        swapped = []                # host swap buffer: (state, js, payload)
 
         def submit(lane):
             # prompts drawn from a tiny alphabet so prefixes collide often
@@ -228,14 +305,47 @@ class TestPoolFuzz:
             arena.apply(pool.lane_release(lane))
             lane_req[lane] = None
 
+        def preempt(lane):
+            # the pre-swap view must be read while the lane's table still
+            # maps its pages (swap_out retires the table host-side)
+            view = arena.view_tags(lane, lane_req[lane][2])
+            # engine order: read payload off the arena BEFORE the release
+            # actions clear unshared pages
+            mapped, actions = pool.swap_out(lane)
+            payload = {j: arena.tag[pid].copy() for j, pid in mapped}
+            arena.apply(actions)
+            swapped.append((lane_req[lane], [j for j, _ in mapped],
+                            payload, view))
+            lane_req[lane] = None
+
+        def resume(lane):
+            state, js, payload, view = swapped.pop(0)
+            try:
+                pids, actions = pool.swap_in(lane, js)
+            except PoolExhaustedError as e:
+                arena.apply(e.actions)           # transactional: no change
+                swapped.insert(0, (state, js, payload, view))
+                return
+            arena.apply(actions)
+            for j, pid in zip(js, pids):
+                arena.tag[pid] = payload[j]      # the engine's scatter
+            # bit-identical round trip: same view, new physical pages
+            assert arena.view_tags(lane, state[2]) == view
+            lane_req[lane] = state
+
         for _ in range(200):
             lane = int(rng.integers(0, lanes))
             op = rng.random()
             if lane_req[lane] is None:
-                submit(lane)
-            elif op < 0.2:
+                if swapped and op < 0.5:
+                    resume(lane)
+                else:
+                    submit(lane)
+            elif op < 0.15:
                 finish(lane)
-            elif op < 0.25 and pool.tree_pages:
+            elif op < 0.3:
+                preempt(lane)
+            elif op < 0.35 and pool.tree_pages:
                 arena.apply(pool.flush_tree())
             else:
                 step(lane)
@@ -249,12 +359,19 @@ class TestPoolFuzz:
                 for t in arena.view_tags(ln, pos):
                     assert t <= tag, "future request's data visible"
 
-        # drain: release every lane, flush the tree -> zero leaked pages
+        # drain: resume + verify every swapped request, release every
+        # lane, flush the tree -> zero leaked pages
         for ln in range(lanes):
             if lane_req[ln] is not None:
                 finish(ln)
+        while swapped:
+            resume(0)
+            if lane_req[0] is not None:
+                finish(0)
         arena.apply(pool.flush_tree())
         pool.check()
         assert pool.free_pages == pool.n - 1
         assert pool.stats["prefix_hits"] > 0       # the workload did share
         assert pool.stats["cow_copies"] > 0        # and did diverge in-page
+        assert pool.stats["swap_outs"] > 0         # and did preempt + swap
+        assert pool.stats["swap_ins"] == pool.stats["swap_outs"]

@@ -17,7 +17,7 @@ from repro.dist.compression import (
 )
 from repro.dist.sharding import AxisEnv, param_specs, set_axis_env
 from repro.models import init_params
-from repro.serve import ServeConfig, ServingEngine
+from repro.serve import QueueFullError, ServeConfig, ServingEngine
 from repro.train import (
     AdamWConfig,
     CheckpointManager,
@@ -337,32 +337,42 @@ class TestServing:
 
     @pytest.mark.parametrize("mode", ["chunked", "packed"])
     def test_max_seq_truncates(self, mode):
-        """max_seq bounds the lane: generation stops at the sequence budget
-        and a prompt that exhausts it still drains (no infinite loop)."""
+        """Requests that cannot fit their decode budget inside max_seq are
+        rejected AT SUBMIT TIME (clear ValueError, nothing enqueued — the
+        lane/PRNG state never sees them), and a legal request alongside
+        still drains within the sequence budget."""
         eng = self._engine(max_seq=16, eos_token=-1,
                            **{**MODES[mode], "token_budget":
                               4 if mode == "packed" else 0})
-        eng.submit([3] * 10, max_new=100, request_id="gen")
-        eng.submit([4] * 30, max_new=100, request_id="longprompt")
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.submit([3] * 10, max_new=100, request_id="gen")
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.submit([4] * 30, max_new=100, request_id="longprompt")
+        assert eng.stats["requests"] == 0  # nothing enqueued
+        eng.submit([3] * 10, max_new=5, request_id="legal")
         done = eng.run_until_drained(max_iters=500)
         by_id = {d["id"]: d["tokens"] for d in done}
-        assert len(by_id) == 2
-        assert 1 <= len(by_id["gen"]) <= 16 - 10
-        assert len(by_id["longprompt"]) == 0  # prompt ate the whole budget
+        assert len(by_id) == 1
+        assert 1 <= len(by_id["legal"]) <= 5
 
     @pytest.mark.parametrize("mode", ["chunked", "packed"])
-    def test_prompt_exactly_max_seq_minus_one(self, mode):
-        """Prompt of exactly max_seq - 1 tokens: the lane fills every
-        position, emits its single boundary token, and terminates on the
-        sequence budget — identical across schedules."""
+    def test_prompt_exactly_max_seq_minus_two(self, mode):
+        """The longest admissible prompt (max_seq - max_new - 1 with
+        max_new=1, i.e. max_seq - 2 tokens): the lane fills every position
+        but the last, emits its single boundary token, and terminates —
+        identical across schedules.  One token longer is rejected at
+        submit time."""
         def run(m):
             eng = self._engine(max_seq=32, eos_token=-1, **MODES[m])
-            eng.submit(list(range(2, 2 + 31)), max_new=100, request_id=0)
+            eng.submit(list(range(2, 2 + 30)), max_new=1, request_id=0)
             return eng.run_until_drained(max_iters=500)[0]["tokens"]
 
         want = run("tokenwise")
-        assert len(want) == 1  # boundary token, then max_seq cut
+        assert len(want) == 1  # boundary token, then max_new cut
         assert run(mode) == want
+        eng = self._engine(max_seq=32, eos_token=-1, **MODES[mode])
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.submit(list(range(2, 2 + 31)), max_new=1)
 
     @pytest.mark.parametrize("mode", ["chunked", "packed"])
     def test_prompt_ends_on_bucket_boundary(self, mode):
@@ -381,14 +391,23 @@ class TestServing:
         """max_seq so small that no multi-token bucket fits below it:
         chunked (whose bucket table is empty) must demote to
         token-at-a-time instead of crashing; packed keeps its always-legal
-        bucket-1 program.  Both must drain."""
+        bucket-1 program.  At max_seq=2 NO request can fit a decode budget
+        (need len(prompt) < max_seq - max_new), so every submit is
+        rejected up front — the degraded engine still never crashes, it
+        just has nothing legal to run."""
         eng = self._engine(max_seq=2, eos_token=-1, **MODES[mode])
         want = {"chunked": "tokenwise", "packed": "packed"}[mode]
         assert eng.mode == want
         assert eng.chunk_buckets in ((), (1,))
-        eng.submit([3, 4, 5], max_new=4, request_id=0)
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.submit([3, 4, 5], max_new=4, request_id=0)
+        assert eng.run_until_drained(max_iters=5) == []
+        # the smallest max_seq that CAN host a request (1 prompt token +
+        # 1 generated) drains through the demoted schedule
+        eng = self._engine(max_seq=3, eos_token=-1, **MODES[mode])
+        eng.submit([3], max_new=1, request_id=0)
         done = eng.run_until_drained(max_iters=50)
-        assert len(done) == 1  # drained (prompt ate the 2-slot budget)
+        assert len(done) == 1 and len(done[0]["tokens"]) == 1
 
     def test_per_lane_prng_decorrelated_and_lane_count_invariant(self):
         """temperature>0: identical prompts in different requests sample
@@ -593,6 +612,154 @@ class TestPagedServing:
         assert not eng.paged and eng.pool is None
         eng.submit([3, 4, 5], max_new=3, request_id=0)
         assert len(eng.run_until_drained()) == 1
+
+
+class TestContinuousBatching:
+    """The serving FRONT END: submit-time validation, bounded-queue
+    backpressure, priorities, lane preemption + KV page swap under pool
+    pressure, and TTFT/TPOT accounting.  The core contract: any schedule
+    of admissions, preemptions, and swaps yields outputs bit-identical to
+    an unconstrained offline drain of the same submissions."""
+
+    PROMPTS = [[10 + (i * 7 + j) % 90 for j in range(14 + (i * 5) % 22)]
+               for i in range(6)]
+
+    def _engine(self, **kw):
+        cfg, params = TestServing._model()
+        kw.setdefault("batch_lanes", 2)
+        kw.setdefault("max_seq", 48)
+        kw.setdefault("token_budget", 8)
+        return ServingEngine(params, cfg, ServeConfig(**kw))
+
+    def _drain(self, eng, prompts, max_new=5, **submit_kw):
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=max_new, request_id=i, **submit_kw)
+        return {d["id"]: d["tokens"] for d in eng.run_until_drained()}
+
+    # -- submit-time validation (satellite regression tests) -------------
+    def test_submit_rejects_empty_prompt(self):
+        eng = self._engine()
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit([], max_new=4)
+        assert eng.stats["requests"] == 0 and not eng.queue
+
+    def test_submit_rejects_prompt_that_cannot_fit_decode_budget(self):
+        eng = self._engine(max_seq=32)
+        # boundary: len == max_seq - max_new is already too long
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.submit(list(range(2, 30)), max_new=4)   # 28 == 32 - 4
+        with pytest.raises(ValueError, match="max_new"):
+            eng.submit([3, 4], max_new=0)
+        assert eng.stats["requests"] == 0 and not eng.queue
+        eng.submit(list(range(2, 29)), max_new=4)        # 27 fits
+        assert len(eng.run_until_drained()) == 1
+
+    # -- bounded queue ----------------------------------------------------
+    def test_bounded_queue_rejects_explicitly(self):
+        eng = self._engine(queue_limit=2)
+        eng.submit([3, 4, 5], max_new=2, request_id="a")
+        eng.submit([3, 4, 6], max_new=2, request_id="b")
+        with pytest.raises(QueueFullError):
+            eng.submit([3, 4, 7], max_new=2, request_id="c")
+        assert eng.stats["rejected"] == 1
+        assert eng.stats["requests"] == 2  # the reject was never counted
+        done = eng.run_until_drained()
+        assert {d["id"] for d in done} == {"a", "b"}
+        # a rejected request does not burn a PRNG stream: a fresh engine
+        # without the rejected submit produces the same tokens
+        ref = self._engine()
+        ref.submit([3, 4, 5], max_new=2, request_id="a")
+        ref.submit([3, 4, 6], max_new=2, request_id="b")
+        want = {d["id"]: d["tokens"] for d in ref.run_until_drained()}
+        assert {d["id"]: d["tokens"] for d in done} == want
+
+    def test_priority_admits_first(self):
+        eng = self._engine(batch_lanes=1)
+        eng.submit([3, 4, 5], max_new=2, request_id="lo", priority=0)
+        eng.submit([6, 7, 8], max_new=2, request_id="hi", priority=5)
+        done = eng.run_until_drained()
+        assert [d["id"] for d in done] == ["hi", "lo"]
+
+    # -- preemption + swap ------------------------------------------------
+    @pytest.mark.parametrize("temperature", [0.0, 0.9])
+    @pytest.mark.parametrize("int8_kv", [False, True])
+    def test_pressure_drain_matches_unconstrained(self, temperature,
+                                                  int8_kv):
+        """Tiny pool (mp + 2 pages for 2 lanes): the drain must preempt,
+        swap KV to host, resume — and still produce exactly the
+        unconstrained engine's tokens, greedy and sampled, bf16 and
+        w8a8."""
+        kw = dict(paged=True, page_size=8, temperature=temperature,
+                  int8_kv=int8_kv, seed=3)
+        want = self._drain(self._engine(**kw), self.PROMPTS)
+        eng = self._engine(pool_pages=8, **kw)   # mp = 48/8 = 6
+        got = self._drain(eng, self.PROMPTS)
+        assert got == want
+        m = eng.serving_metrics()
+        assert m["preemptions"] >= 1 and m["resumes"] >= 1
+        assert m["swap_out_pages"] == m["swap_in_pages"] >= 1
+        # zero leaked pages, consistent bookkeeping after the storm
+        eng.pool.check()
+        eng._apply_pool_actions(eng.pool.flush_tree())
+        assert eng.pool.free_pages == eng.pool.n - 1
+
+    def test_victim_is_lowest_priority_then_shortest_progress(self):
+        """Under pressure the engine preempts the lowest-priority lane;
+        the high-priority request must never appear in the victim log."""
+        eng = self._engine(paged=True, page_size=8, pool_pages=8)
+        long = [11 + i % 80 for i in range(30)]
+        eng.submit(long, max_new=6, request_id="lo", priority=0)
+        eng.submit([90 + i % 60 for i in range(30)], max_new=6,
+                   request_id="hi", priority=3)
+        done = eng.run_until_drained()
+        assert {d["id"] for d in done} == {"lo", "hi"}
+        m = eng.serving_metrics()
+        assert m["preemptions"] >= 1
+        assert set(eng.stats["preempted_requests"]) == {"lo"}
+
+    def test_dense_engine_never_preempts(self):
+        eng = self._engine(paged=False)
+        out = self._drain(eng, self.PROMPTS)
+        assert len(out) == len(self.PROMPTS)
+        assert eng.serving_metrics()["preemptions"] == 0
+
+    # -- latency + SLO accounting ----------------------------------------
+    def test_ttft_tpot_and_slo_accounting(self):
+        eng = self._engine()
+        eng._clock = iter(range(10_000)).__next__  # deterministic "clock"
+        out = self._drain(eng, self.PROMPTS, max_new=4,
+                          ttft_slo_ms=0.0, tpot_slo_ms=0.0)
+        assert len(out) == len(self.PROMPTS)
+        st = eng.stats
+        assert len(st["ttft_ms"]) == len(self.PROMPTS)
+        assert len(st["tpot_ms"]) == len(self.PROMPTS)
+        assert all(t > 0 for t in st["ttft_ms"])
+        # impossible SLOs: every request must be counted as a miss
+        assert st["slo_ttft_miss"] == len(self.PROMPTS)
+        assert st["slo_tpot_miss"] == len(self.PROMPTS)
+        m = eng.serving_metrics()
+        assert m["ttft_p99_ms"] >= m["ttft_p50_ms"] > 0
+
+    def test_on_token_streams_in_commit_order(self):
+        eng = self._engine()
+        seen = []
+        eng.submit([3, 4, 5], max_new=4, request_id="s",
+                   on_token=lambda rid, tok: seen.append((rid, tok)))
+        done = eng.run_until_drained()
+        assert [t for _, t in seen] == done[0]["tokens"]
+        assert all(rid == "s" for rid, _ in seen)
+
+    def test_run_stream_matches_offline_drain(self):
+        """run_stream with all-zero offsets == plain submit-then-drain:
+        arrival timing is measurement plumbing, never a token input."""
+        want = self._drain(self._engine(temperature=0.8, seed=5),
+                           self.PROMPTS, max_new=4)
+        eng = self._engine(temperature=0.8, seed=5)
+        schedule = [(0.0, dict(prompt=p, max_new=4, request_id=i))
+                    for i, p in enumerate(self.PROMPTS)]
+        done, rejected = eng.run_stream(schedule)
+        assert rejected == []
+        assert {d["id"]: d["tokens"] for d in done} == want
 
 
 class TestShardingRules:
