@@ -128,6 +128,36 @@ def _stream_ttft_gate(path: str) -> None:
               "(fresh checkout)")
 
 
+def _spec_gate(path: str) -> None:
+    """Speculation-payoff gate: on the repetition-heavy serve_spec
+    workload, every spec_k>1 row must be at least as fast (us/token) as
+    the k=1 row — if drafting deeper than one token ever LOSES to the
+    single-draft baseline there, the verify-row/rollback overhead has
+    outgrown the accepted-token win and the feature is regressing on the
+    very traffic it exists for.  (k=1 vs k=0 is not gated: vanilla wins
+    on repetition-free traffic by construction — speculation is opt-in.)
+    Same merged-artifact semantics as the other gates.
+    """
+    with open(os.path.join(REPO_ROOT, path)) as f:
+        entries = json.load(f).get("entries", {})
+    bases = [k for k in entries
+             if k.startswith("e2e/serve_spec_") and k.endswith("_k1")]
+    pairs = [(b, k) for b in bases for k in entries
+             if k.startswith(b[:-len("_k1")] + "_k") and k != b]
+    for bkey, kkey in sorted(pairs):
+        b_us, k_us = entries[bkey]["us"], entries[kkey]["us"]
+        ratio = b_us / max(k_us, 1e-9)
+        print(f"spec gate: {kkey} {k_us}us vs {bkey} {b_us}us "
+              f"({ratio:.2f}x speedup)")
+        if k_us > b_us:
+            raise SystemExit(
+                f"PERF regression: {kkey} ({k_us}us/token) loses to "
+                f"{bkey} ({b_us}us/token) on the repetition-heavy "
+                f"workload — speculative overhead outgrew its win")
+    if not pairs:
+        print("spec gate: no serve_spec pairs in artifact (fresh checkout)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -159,6 +189,7 @@ def main() -> None:
     _write_json("BENCH_e2e.json", e2e_rows, meta, smoke=args.smoke)
     _decode_perf_gate("BENCH_e2e.json")
     _stream_ttft_gate("BENCH_e2e.json")
+    _spec_gate("BENCH_e2e.json")
 
 
 if __name__ == "__main__":

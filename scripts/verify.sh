@@ -9,14 +9,21 @@
 # smoke (bit-identical outputs + nonzero prefix-hit stat), a
 # continuous-batching overload smoke (Poisson arrivals into a deliberately
 # tiny pool: zero leaks, >=1 preemption + swap round trip, outputs
-# bit-identical to an unconstrained offline drain), and a doc link check.
+# bit-identical to an unconstrained offline drain), a self-speculative
+# equivalence smoke (spec_k in {2,4} x dense/paged: bit-identical to
+# vanilla greedy with nonzero draft acceptance), and a doc link check.
+#
+# The pytest tier runs `-m "not slow"`: the heaviest equivalence-matrix
+# cases (int8/chunked sub-matrices in tests/test_speculative.py) carry
+# the `slow` marker (tests/conftest.py) and are covered by a plain
+# `pytest` run in CI / before release, not on every local gate.
 #
 # Usage: scripts/verify.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== tier-1: pytest =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+echo "== tier-1: pytest (fast tier: -m 'not slow') =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow"
 
 echo "== benchmark smoke =="
 python benchmarks/run.py --smoke
@@ -50,6 +57,9 @@ PYTHONPATH=src python scripts/paged_equiv_smoke.py
 
 echo "== continuous-batching overload smoke (tiny pool: preempt + swap) =="
 PYTHONPATH=src python scripts/overload_smoke.py
+
+echo "== self-speculative equivalence smoke (spec_k x dense/paged) =="
+PYTHONPATH=src python scripts/spec_equiv_smoke.py
 
 echo "== doc link check =="
 python scripts/check_doc_links.py

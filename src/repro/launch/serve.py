@@ -50,6 +50,11 @@ def main() -> None:
     ap.add_argument("--queue-limit", type=int, default=0,
                     help="admission queue bound (0 = unbounded); submits "
                          "beyond it are rejected explicitly")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative draft tokens per decode step "
+                         "(prompt-lookup drafts verified in one packed "
+                         "forward; greedy engines only — bit-identical "
+                         "output at any k, see docs/serving.md)")
     ap.add_argument("--stream-gap-ms", type=float, default=0.0,
                     help="mean Poisson inter-arrival gap in ms; >0 switches "
                          "from offline drain to the timed run_stream front "
@@ -76,7 +81,7 @@ def main() -> None:
                     prefill_chunk=args.prefill_chunk, seed=args.seed,
                     paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages,
-                    queue_limit=args.queue_limit),
+                    queue_limit=args.queue_limit, spec_k=args.spec_k),
         kv_source=kv_source)
 
     rng = np.random.default_rng(args.seed)

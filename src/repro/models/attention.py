@@ -206,6 +206,25 @@ def scatter_pages(cache: dict, page_ids, payload: dict) -> dict:
     return cache
 
 
+def rollback_cache(cache: dict, keep) -> dict:
+    """Speculative-decode KV rewind for the DENSE layout: mark every slot
+    holding a position >= the lane's ``keep`` bound as empty again.
+
+    ``keep`` is (B,) int32 — per lane, the first position whose write must
+    be withdrawn (rejected draft tokens); lanes with nothing to roll back
+    pass a bound above ``max_seq``.  Only ``pos_ids`` is touched: masking
+    derives from positions everywhere (``_sdpa`` valid/causal masks, the
+    decode kernels), so flipping a slot's pos_id to -1 un-writes it — the
+    stale K/V payload is unreadable and the slot is reclaimed by the next
+    genuine write at that ring position, exactly as if the rejected token
+    had never been fed.  Works on a single layer's (B, S) pos_ids or the
+    engine's period-stacked (P, B, S) leaves.
+    """
+    pos = cache["pos_ids"]
+    bound = keep.reshape((1,) * (pos.ndim - 2) + (keep.shape[0], 1))
+    return dict(cache, pos_ids=jnp.where(pos >= bound, -1, pos))
+
+
 def _write_cache(cache: dict, k, v, positions):
     """Write k/v (B,T,Hkv,D) at ring slots positions % S.
 

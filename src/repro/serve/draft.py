@@ -1,0 +1,67 @@
+"""Self-speculative draft proposal: prompt-lookup / n-gram drafting.
+
+Speculative decoding needs a cheap guess at the next k tokens so the
+verifier (the real model, serve/engine.py) can score them all in ONE
+packed forward instead of k sequential ones.  This module is the
+draft side — and deliberately NOT a second model: it proposes the
+continuation of the most recent earlier occurrence of the sequence's
+trailing n-gram (prompt-lookup decoding).  Repetitive contexts — code,
+templated text, greedy decode loops that fall into a cycle — repeat
+their own n-grams, so copying what followed last time is frequently
+exactly what the model will emit; on non-repetitive contexts the lookup
+simply finds nothing and the lane decodes vanilla, so drafting never
+costs a wasted forward row when it has nothing to say.
+
+Drafts are PROPOSALS only.  The engine's verifier accepts a draft token
+iff it equals the model's own greedy argmax at that position, so the
+draft source affects SPEED (acceptance rate), never OUTPUT — any
+function of the visible context is a correct proposer.  This is also
+why the proposer must be a pure host-side function of the token
+history: determinism keeps the speculative drain reproducible, and the
+equivalence tests swap in adversarial proposers (all-wrong, all-right,
+random) through the same interface.
+"""
+from __future__ import annotations
+
+# n-gram window for the suffix lookup: try the longest match first (a
+# 3-gram repeat is strong evidence of a repeated span), fall back to
+# shorter ones, give up below MIN_NGRAM (a 0-gram "match" would draft
+# from an arbitrary offset — pure noise, rejected almost always)
+MAX_NGRAM = 3
+MIN_NGRAM = 1
+
+
+def ngram_propose(context: list[int], k: int,
+                  max_ngram: int = MAX_NGRAM,
+                  min_ngram: int = MIN_NGRAM) -> list[int]:
+    """Draft up to ``k`` tokens continuing ``context`` by prompt lookup.
+
+    Finds an earlier occurrence of the longest trailing n-gram
+    (``min_ngram <= n <= max_ngram``) and returns the tokens that
+    followed it.  Among same-length matches recency wins (the most
+    recent repetition is the best predictor of what the sequence is
+    currently doing), but a match whose continuation is clipped by the
+    context end loses to an older one with a full ``k``-token
+    continuation: on a periodic tail — exactly the case prompt lookup
+    exists for — the most recent match overlaps the end so heavily that
+    its continuation is ~1 token, while one period back the same n-gram
+    predicts the whole next period.  Returns possibly fewer than ``k``
+    tokens when every match sits near the end, ``[]`` when nothing
+    repeats.  Pure and deterministic: same context, same draft.
+    """
+    if k <= 0:
+        return []
+    n_ctx = len(context)
+    for n in range(min(max_ngram, n_ctx - 1), min_ngram - 1, -1):
+        pat = context[n_ctx - n:]
+        best_i, best_len = -1, 0
+        for i in range(n_ctx - n - 1, -1, -1):
+            if context[i:i + n] == pat:
+                cont = min(k, n_ctx - i - n)
+                if cont >= k:                      # full draft, most recent
+                    return list(context[i + n:i + n + k])
+                if cont > best_len:
+                    best_i, best_len = i, cont
+        if best_len:
+            return list(context[best_i + n:best_i + n + best_len])
+    return []

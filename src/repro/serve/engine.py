@@ -18,6 +18,21 @@ sampling key is folded at its own last fed position, so a request's tokens
 are a pure function of (seed, submission id, position) — never of lane
 count, co-resident traffic, or scheduling mode.
 
+SELF-SPECULATIVE DECODING (``ServeConfig.spec_k``, serve/draft.py,
+docs/serving.md) rides the same program family: a greedy decode lane may
+carry its last token plus up to k prompt-lookup draft tokens as one
+contiguous span, the verifier reads the greedy argmax at EVERY span row
+(causal masking derives from absolute positions, so row j cannot see the
+drafted tokens after it — its logits are bit-identical to sequential
+decode's), commits the longest draft-matching run plus one corrective
+token, and withdraws the rejected positions' KV writes
+(``kv_pool.truncate`` clear/copy actions on paged, the
+``attention.rollback_cache`` pos_ids rewind on dense).  Output is
+bit-identical to vanilla greedy decode for ANY draft content — drafts buy
+speed (fewer forwards per committed token), never correctness.  Sampled
+engines and tokenwise (recurrent) mode never speculate, so their token
+and PRNG streams are untouched by ``spec_k``.
+
 The engine adds host-side continuous batching: a slot-based scheduler
 admits queued requests into free batch lanes each iteration (requests
 carry their own position counters, so lanes mix sequences at different
@@ -96,7 +111,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import ArchConfig, forward, init_states, precompute_cross_states
-from ..models.attention import gather_pages, scatter_pages
+from ..models.attention import gather_pages, rollback_cache, scatter_pages
+from .draft import ngram_propose
 from .kv_pool import PagedKVPool, PoolExhaustedError
 from .queue import AdmissionQueue, QueueFullError, percentile
 
@@ -116,6 +132,10 @@ class ServeConfig:
     pool_pages: int = 0          # physical pages; 0 = auto-size
     queue_limit: int = 0         # admission-queue bound; 0 = unbounded
     swap: bool = True            # preempt + swap KV pages under pressure
+    spec_k: int = 0              # self-speculative draft tokens per decode
+    #                              step (0 = off; greedy engines only —
+    #                              sampled engines silently fall back so
+    #                              PRNG streams are untouched)
 
 
 def packed_step(params, cfg: ArchConfig, tokens, positions, states,
@@ -190,6 +210,21 @@ def _paged_copy(states, src, dst, keep):
         kv["ppos"] = kv["ppos"].at[:, dst].set(pos)
         return kv
     return _paged_states_map(states, cp)
+
+
+def _dense_rollback(states, keep):
+    """Withdraw DENSE KV writes at positions >= ``keep`` ((B,) int32,
+    huge sentinel = lane untouched) in every dense cache of the state
+    tree — the speculative-rejection rewind (attention.rollback_cache).
+    Paged caches are skipped: their rewind is the pool's truncate
+    actions, applied through the clear/copy machinery instead."""
+    out = []
+    for st in states:
+        if isinstance(st, dict) and "kv" in st and "pos_ids" in st["kv"]:
+            out.append(dict(st, kv=rollback_cache(st["kv"], keep)))
+        else:
+            out.append(st)
+    return out
 
 
 def _paged_swap_in(states, idx, payloads):
@@ -287,20 +322,49 @@ class ServingEngine:
                                       window_slack=self._window_slack)
 
         def _packed_masked(params, tokens, positions, states, lane_mask,
-                           last_idx, commit_all):
-            lg, new_states = packed_step(params, cfg, tokens, positions,
-                                         states, last_idx=last_idx,
+                           last_idx, commit_all, verify_rows):
+            logits, new_states = forward(params, cfg, tokens,
+                                         positions=positions, states=states,
                                          kv_source=kv_source)
+            # per-lane gather of the last ``verify_rows`` valid rows
+            # (speculative verification reads the greedy argmax at EVERY
+            # drafted position; verify_rows == 1 is exactly the old
+            # last-row gather).  Indices clip at row 0 — lanes with spans
+            # shorter than verify_rows ignore the duplicate leading rows.
+            idx = jnp.maximum(
+                last_idx[:, None] - jnp.arange(verify_rows - 1, -1, -1), 0)
+            lg = jnp.take_along_axis(logits, idx[:, :, None], axis=1)
+            greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)   # (B, R)
             if commit_all:  # static: every lane participated, skip select
-                return lg, new_states
-            return lg, _masked_commit(states, new_states, lane_mask)
+                return lg[:, -1], greedy, new_states
+            return (lg[:, -1], greedy,
+                    _masked_commit(states, new_states, lane_mask))
 
         # ONE jitted callable for prefill, decode, and mixed packed batches:
         # XLA compiles one program per (bucket, commit_all) — the old
         # prefill/decode dual compile caches are gone.  commit_all is
         # static: the all-lanes steady state skips the full-tree lane
-        # select (pure extra cache traffic there).
-        self._step_fn = jax.jit(_packed_masked, static_argnums=(6,))
+        # select (pure extra cache traffic there).  verify_rows is static
+        # too but adds no programs: it is a fixed function of the bucket
+        # (min(spec_k + 1, bucket)).
+        self._step_fn = jax.jit(_packed_masked, static_argnums=(6, 7))
+        # -- self-speculative decoding (serve/draft.py, docs/serving.md) --
+        # Greedy engines only: acceptance compares drafts against the
+        # model's own argmax, which a sampled stream does not follow —
+        # sampled engines fall back to vanilla decode so their PRNG
+        # streams are bit-identical with spec_k set or not.  Tokenwise
+        # mode (recurrent archs) cannot rewind its recurrence, so it
+        # never speculates.  Draft length is capped one below the largest
+        # bucket: a speculating lane is a (1 + k)-token span.
+        self._spec_k = 0
+        if (serve_cfg.spec_k > 0 and serve_cfg.temperature <= 0.0
+                and self._mode != "tokenwise"):
+            self._spec_k = min(serve_cfg.spec_k, self._buckets[-1] - 1)
+        # pluggable proposer (tests swap in adversarial drafts — the
+        # output contract holds for ANY proposer, only speed varies)
+        self._draft_fn = ngram_propose
+        self._rollback_fn = jax.jit(_dense_rollback, donate_argnums=(0,))
+        self._no_rollback = 1 << 30   # per-lane sentinel: nothing to rewind
 
         def _reset_lane(states, lane):
             """Clear one batch lane back to its init value (fresh request)."""
@@ -450,10 +514,11 @@ class ServingEngine:
         # (chunked mode): the all-lanes-DECODING steady state is the
         # dominant production program
         for t in sorted({1, *self._buckets}):
-            _, self.states = self._step_fn(
+            _, _, self.states = self._step_fn(
                 self.params, jnp.zeros((b, t), jnp.int32),
                 jnp.full((b, t), -1, jnp.int32), self.states,
-                jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32), True)
+                jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32), True,
+                min(self._spec_k + 1, t))
         if self._paged:
             # warmup prompts must not linger as shareable prefixes (or hold
             # pages): flush the radix index before real traffic arrives
@@ -482,6 +547,8 @@ class ServingEngine:
             "swap_out_pages": 0, "swap_in_pages": 0,
             "ttft_ms": [], "tpot_ms": [],
             "slo_ttft_miss": 0, "slo_tpot_miss": 0,
+            # self-speculative decoding (docs/serving.md glossary)
+            "spec_drafted": 0, "spec_accepted": 0, "spec_steps": 0,
         }
         if self._paged:
             # prefix-hit / COW / eviction counters live in pool.stats (one
@@ -706,6 +773,11 @@ class ServingEngine:
         req = self.lane_request[lane]
         rec = {"id": req["id"], "prompt": req["prompt"],
                "tokens": req["generated"]}
+        if "_spec_drafted" in req:
+            # per-request draft/accept counters (acceptance rate = how
+            # well the proposer predicted THIS request's greedy stream)
+            rec["spec_drafted"] = req["_spec_drafted"]
+            rec["spec_accepted"] = req["_spec_accepted"]
         if "t_first" in req:
             st = self.stats
             ttft = (req["t_first"] - req["t_submit"]) * 1e3
@@ -747,21 +819,43 @@ class ServingEngine:
             self.lane_keys, jnp.asarray(key_pos))
 
     # -- packed forward over a per-lane token plan ------------------------
+    def _propose(self, lane: int) -> list[int]:
+        """Draft tokens for a generating lane (self-speculation).  Stores
+        the draft on the request (consumed by ``_run_lanes``) and returns
+        it; empty when speculation is off or the proposer finds nothing.
+        Drafting never outruns what the request could still commit: the
+        length is capped at the remaining ``max_new`` budget and the
+        lane's sequence room, on top of the bucket cap from __init__."""
+        req = self.lane_request[lane]
+        k = self._spec_k
+        if k:
+            k = min(k, req["max_new"] - len(req["generated"]) - 1,
+                    self.scfg.max_seq - 1 - int(self.lane_pos[lane]))
+        if k <= 0:
+            req["_draft"] = []
+        else:
+            ctx = req["prompt"] + req["generated"]
+            req["_draft"] = [int(t) for t in self._draft_fn(ctx, k)][:k]
+        return req["_draft"]
+
     def _plan_tokens(self, lanes: list[int], budget: int) -> dict[int, int]:
-        """Per-lane token counts for one forward: generating lanes take 1,
-        prefilling lanes waterfill the remaining budget — shortest pending
-        prompt first, so a short prompt takes only what it needs and the
-        leftover flows to longer ones (each lane gets at least 1 token,
-        capped at the largest bucket, its pending prompt, and its
-        remaining sequence room).  Lanes whose prompt exhausted the
-        sequence budget are finished here."""
+        """Per-lane token counts for one forward: generating lanes take 1
+        (plus their speculative draft, when one exists — a speculating
+        decode lane is a 1+k-token contributor), prefilling lanes
+        waterfill the remaining budget — shortest pending prompt first,
+        so a short prompt takes only what it needs and the leftover flows
+        to longer ones (each lane gets at least 1 token, capped at the
+        largest bucket, its pending prompt, and its remaining sequence
+        room).  Lanes whose prompt exhausted the sequence budget are
+        finished here."""
         cap = self._buckets[-1] if self._buckets else 1
         prefilling = [l for l in lanes
                       if self.lane_request[l]["_pending_prompt"]]
-        plan = {l: 1 for l in lanes if l not in prefilling}
+        plan = {l: 1 + len(self._propose(l))
+                for l in lanes if l not in prefilling}
         if not prefilling:
             return plan
-        left = budget - len(plan)
+        left = budget - sum(plan.values())
         order = sorted(prefilling, key=lambda l: (
             len(self.lane_request[l]["_pending_prompt"]), l))
         for i, lane in enumerate(order):
@@ -778,9 +872,22 @@ class ServingEngine:
     def _run_lanes(self, plan: dict[int, int]) -> None:
         """ONE packed forward: each lane in ``plan`` contributes its token
         count (prompt tokens if it is still consuming its prompt, else its
-        last sampled token), rows right-padded with position -1 up to the
-        smallest bucket that fits.  Logits gather at per-lane last valid
-        indices; sampling keys fold at per-lane last fed positions."""
+        last sampled token plus any speculative draft), rows right-padded
+        with position -1 up to the smallest bucket that fits.  Logits
+        gather at per-lane last valid indices; sampling keys fold at
+        per-lane last fed positions.
+
+        Speculating lanes (span 1 + m) run the draft-then-verify commit:
+        the span's greedy argmax rows ARE sequential decode's outputs
+        (causal masking derives from absolute positions, so row j of the
+        span cannot see the drafted tokens after it), so the verifier
+        accepts draft tokens while they match the argmax of the PREVIOUS
+        row, commits that run plus one corrective token, and withdraws
+        the KV writes of every rejected position — pool.truncate actions
+        (paged) or the pos_ids rewind (dense).  Committed tokens replay
+        vanilla's per-token stop rules (max_new / EOS / sequence end), so
+        the emitted stream is bit-identical to vanilla greedy decode for
+        ANY draft content."""
         if not plan:
             return
         b = self.scfg.batch_lanes
@@ -796,12 +903,14 @@ class ServingEngine:
         need = max(plan.values())
         t = need if need == 1 else next(
             bk for bk in self._buckets if bk >= need)
+        vr = min(self._spec_k + 1, t)         # verify rows (static per bucket)
         tok = np.zeros((b, t), np.int32)
         pos = np.full((b, t), -1, np.int32)   # -1 = pad: cache write dropped
         last_idx = np.zeros(b, np.int32)
         mask = np.zeros(b, bool)
         key_pos = self.lane_pos.copy()
-        n_prompt = n_decode = 0
+        n_prompt = 0
+        speculating = False
         for lane, c in plan.items():
             req = self.lane_request[lane]
             p0 = int(self.lane_pos[lane])
@@ -811,7 +920,9 @@ class ServingEngine:
             else:
                 if req["generated"]:
                     tok[lane, 0] = req["generated"][-1]
-                n_decode += 1                 # c == 1 for generating lanes
+                if c > 1:                     # speculative draft rows
+                    tok[lane, 1:c] = req["_draft"][:c - 1]
+                    speculating = True
             pos[lane, :c] = np.arange(p0, p0 + c)
             last_idx[lane] = c - 1
             key_pos[lane] = p0 + c - 1        # last fed position
@@ -819,21 +930,22 @@ class ServingEngine:
         # paged mode always commits the whole tree: the shared arena has no
         # lane dimension to mask (pad writes are position-dropped, and no
         # per-lane state leaves exist on paged-capable archs)
-        lg, self.states = self._step_fn(
+        lg, greedy, self.states = self._step_fn(
             self.params, jnp.asarray(tok), jnp.asarray(pos), self.states,
             jnp.asarray(mask), jnp.asarray(last_idx),
-            True if self._paged else bool(mask.all()))
+            True if self._paged else bool(mask.all()), vr)
         nxt = np.asarray(_sample(lg, self.scfg.temperature,
                                  self._keys_at(key_pos)))
+        greedy = np.asarray(greedy) if speculating else None
         st = self.stats
         st["forwards"][t] = st["forwards"].get(t, 0) + 1
-        st["prompt_tokens"] += n_prompt
-        st["decode_tokens"] += n_decode
-        st["pad_tokens"] += t * len(plan) - n_prompt - n_decode
+        n_decode = 0
+        rollback_keep = None                  # dense rewind bounds (B,)
         for lane, c in plan.items():
             req = self.lane_request[lane]
-            self.lane_pos[lane] += c
+            p0 = int(self.lane_pos[lane])
             if req["_pending_prompt"]:
+                self.lane_pos[lane] += c
                 del req["_pending_prompt"][:c]
                 if not req["_pending_prompt"]:
                     # boundary token: sampled from the last prompt logit,
@@ -843,9 +955,61 @@ class ServingEngine:
                         # prompt fully in cache: register its pages in the
                         # radix index so later submissions can share them
                         self.pool.register_prompt(lane, req["prompt"])
-            else:
+                self._check_done(lane)
+                continue
+            draft = req.pop("_draft", [])
+            if c == 1:                        # vanilla decode row
+                self.lane_pos[lane] += 1
+                n_decode += 1
                 self._emit(req, int(nxt[lane]))
+                self._check_done(lane)
+                continue
+            # draft-then-verify: v[j] = the model's greedy token after
+            # feeding span row j (position p0 + j) — this span's last c
+            # verify rows.  Accept drafts while they match; commit the
+            # accepted run plus the first corrective token.
+            m = c - 1
+            v = greedy[lane, vr - c:]
+            a = 0
+            while a < m and draft[a] == v[a]:
+                a += 1
+            st["spec_drafted"] += m
+            st["spec_accepted"] += a
+            st["spec_steps"] += 1
+            req["_spec_drafted"] = req.get("_spec_drafted", 0) + m
+            req["_spec_accepted"] = req.get("_spec_accepted", 0) + a
+            # commit one token at a time under vanilla's stop rules —
+            # tokens past a stop are discarded exactly as vanilla never
+            # would have generated them
+            e = 0
+            for i in range(a + 1):
+                e += 1
+                self._emit(req, int(v[i]))
+                if (len(req["generated"]) >= req["max_new"]
+                        or int(v[i]) == self.scfg.eos_token
+                        or p0 + e >= self.scfg.max_seq - 1):
+                    break
+            self.lane_pos[lane] = p0 + e
+            n_decode += e
+            if e < c:
+                # rejected tail [p0+e, p0+c): withdraw its KV writes so
+                # the cache is exactly what sequential decode would hold
+                if self._paged:
+                    self._apply_pool_actions(
+                        self.pool.truncate(lane, p0 + e, p0 + c))
+                else:
+                    if rollback_keep is None:
+                        rollback_keep = np.full(b, self._no_rollback,
+                                                np.int32)
+                    rollback_keep[lane] = p0 + e
             self._check_done(lane)
+        if rollback_keep is not None:
+            self.states = self._rollback_fn(self.states,
+                                            jnp.asarray(rollback_keep))
+        st["prompt_tokens"] += n_prompt
+        st["decode_tokens"] += n_decode
+        # rejected speculative rows count as pads: they bought no output
+        st["pad_tokens"] += t * len(plan) - n_prompt - n_decode
 
     # -- scheduler --------------------------------------------------------
     def step(self) -> None:
@@ -876,7 +1040,9 @@ class ServingEngine:
             decoding = [l for l in lanes if self.lane_active[l]
                         and l not in prefilling]
             if decoding:
-                self._run_lanes({l: 1 for l in decoding})
+                # decode call: 1 token per lane + any speculative draft
+                self._run_lanes({l: 1 + len(self._propose(l))
+                                 for l in decoding})
             return
         # tokenwise: prompts feed one token per call (recurrent-arch safe)
         self._run_lanes({l: 1 for l in lanes})
@@ -940,6 +1106,11 @@ class ServingEngine:
             "swap_in_pages": st["swap_in_pages"],
             "slo_ttft_miss": st["slo_ttft_miss"],
             "slo_tpot_miss": st["slo_tpot_miss"],
+            "spec_drafted": st["spec_drafted"],
+            "spec_accepted": st["spec_accepted"],
+            "spec_accept_rate": round(
+                st["spec_accepted"] / st["spec_drafted"], 4)
+            if st["spec_drafted"] else 0.0,
         }
 
     def stats_summary(self) -> str:
@@ -959,6 +1130,11 @@ class ServingEngine:
                f"row_eff={eff:.0f}% forwards[{fwd}] prefix_hist[{hist}]")
         if st["budget_tokens"]:
             out += f" budget_fill={fill:.0f}%"
+        if self._spec_k:
+            rate = (100.0 * st["spec_accepted"] / st["spec_drafted"]
+                    if st["spec_drafted"] else 0.0)
+            out += (f" spec[k={self._spec_k} drafted={st['spec_drafted']}"
+                    f" accepted={st['spec_accepted']} rate={rate:.0f}%]")
         if self._paged:
             ps = self.pool.stats
             out += (f" paged[page={self.pool.ps} hits={ps['prefix_hits']}"

@@ -372,6 +372,42 @@ class PagedKVPool:
                 return
             node = child
 
+    def truncate(self, lane: int, keep: int, end: int) -> list[Action]:
+        """Speculative-decode rollback: withdraw the lane's KV writes for
+        positions [``keep``, ``end``) — rejected draft tokens.
+
+        Pages wholly inside the rejected span are pure-decode pages the
+        lane owns exclusively (speculation starts strictly after prefill,
+        so no prompt slot and no tree node can sit at or beyond ``keep``):
+        unmap + release them, which clears and frees any page nothing
+        else holds.  The boundary page keeps its first ``keep % ps``
+        slots (committed tokens, and — for the page straddling the
+        prompt/decode boundary — registered prompt slots, which always
+        lie below ``keep``) and clears the rejected tail via a SELF-copy
+        action: ("copy", pid, pid, keep%ps) reuses the COW machinery's
+        keep-semantics as an in-page pos_ids truncation.  Exactness never
+        depends on this (stale slots hold positions >= keep, masked for
+        every query until genuinely overwritten); it keeps the arena
+        bit-identical to a vanilla decode's and returns over-allocated
+        pages to the pool while the lane is still running."""
+        actions: list[Action] = []
+        if keep >= end:
+            return actions
+        # release pages wholly rejected: logical j covering [j*ps, (j+1)*ps)
+        for j in range(-(-keep // self.ps), (end - 1) // self.ps + 1):
+            pid = int(self.table[lane, j])
+            if pid:
+                assert pid not in self._node_of_page and self.ref[pid] == 1, (
+                    "speculative write landed on a shared page", lane, j)
+                self._release_page(pid, actions)
+                self.table[lane, j] = 0
+        fill = keep % self.ps
+        if fill:
+            pid = int(self.table[lane, keep // self.ps])
+            if pid:
+                actions.append(("copy", pid, pid, fill))
+        return actions
+
     def cap_window(self, lane: int, next_pos: int, window: int) -> list[Action]:
         """Sliding-window archs: unmap pages wholly behind the window of
         every future query (positions < next_pos - window).  Masking keeps

@@ -9,6 +9,15 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # tier split: scripts/verify.sh runs `pytest -m "not slow"` so the
+    # heaviest equivalence-matrix cases (tests/test_speculative.py) stay
+    # out of the fast tier; plain `pytest` still runs the full matrix
+    config.addinivalue_line(
+        "markers", "slow: heavy equivalence-matrix case (excluded from "
+        "the verify.sh fast tier via -m 'not slow')")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

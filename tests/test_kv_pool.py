@@ -242,6 +242,45 @@ class TestPoolBasics:
         assert len(pids) == 3 and not pool.table[0].any()
         pool.check()
 
+    def test_truncate_releases_tail_pages_and_masks_boundary(self):
+        """Speculative rollback: commit 11 of 15 written positions.
+        Pages wholly past the frontier are released (clear actions, back
+        on the free list); the boundary page keeps its first keep%ps
+        slots via a self-copy and masks the rest."""
+        pool = _mk(lanes=1, mp=4, ps=4)
+        arena = _ShadowArena(pool)
+        prompt = list(range(100, 108))            # 2 full pages
+        arena.apply(pool.ensure_writable(0, 0, 15))
+        arena.write(0, 0, 15, req_tag=5)
+        pool.register_prompt(0, prompt)
+        free0 = pool.free_pages
+        actions = pool.truncate(0, keep=11, end=15)
+        arena.apply(actions)
+        pool.check()
+        assert pool.table[0, 3] == 0              # page 3 (pos 12-15) freed
+        assert pool.free_pages == free0 + 1
+        ((_, src, dst, keep),) = [a for a in actions if a[0] == "copy"]
+        assert src == dst == pool.table[0, 2] and keep == 3   # in-place mask
+        assert arena.view_tags(0, 11) == [5] * 11            # kept span
+        assert arena.tag[int(pool.table[0, 2]), 3] == -1     # masked tail
+
+    def test_truncate_noop_and_prompt_floor(self):
+        pool = _mk(lanes=1, mp=4, ps=4)
+        arena = _ShadowArena(pool)
+        prompt = list(range(100, 110))            # 2.5 pages
+        arena.apply(pool.ensure_writable(0, 0, 12))
+        arena.write(0, 0, 12, req_tag=3)
+        pool.register_prompt(0, prompt)
+        assert pool.truncate(0, keep=12, end=12) == []       # nothing to do
+        # minimum legal rollback frontier (one committed decode token):
+        # the tree-held boundary page's prompt slots must survive
+        actions = pool.truncate(0, keep=len(prompt) + 1, end=12)
+        arena.apply(actions)
+        pool.check()
+        assert arena.view_tags(0, 11) == [3] * 11
+        assert arena.tag[int(pool.table[0, 2]), 3] == -1
+        assert pool.tree_pages == 3               # registration untouched
+
     def test_window_cap_unmaps_behind_window(self):
         pool = _mk(lanes=1, mp=8, ps=4, extra=2)
         pool.ensure_writable(0, 0, 20)       # pages 0..4 mapped
@@ -256,11 +295,14 @@ class TestPoolBasics:
 class TestPoolFuzz:
     """Random engine-shaped traffic against the invariant checker and the
     shadow arena: submit (admit + incremental writes + register), step,
-    finish, tree flushes, plus preempt (swap-out) / resume (swap-in) with
-    a modeled host swap buffer — across 3 seeds x 200 ops.  A resumed
-    lane's view must be tag-for-tag its pre-swap view even though every
-    physical page moved, and COW sources registered in the tree must
-    survive swap churn untouched."""
+    finish, tree flushes, truncate (speculative rollback), plus preempt
+    (swap-out) / resume (swap-in) with a modeled host swap buffer —
+    across 3 seeds x 200 ops.  A resumed lane's view must be tag-for-tag
+    its pre-swap view even though every physical page moved, COW sources
+    registered in the tree must survive swap churn untouched, and a
+    truncate must clear exactly the rejected tail — kept slots
+    untouched, released pages back on the free list, boundary-page
+    prompt slots (tree-held) intact."""
 
     @pytest.mark.parametrize("seed", [0, 1, 2])
     def test_random_lifecycle_no_leaks_no_cross_lane_reads(self, seed):
@@ -271,6 +313,7 @@ class TestPoolFuzz:
         max_seq = mp * ps
         lane_req = [None] * lanes   # (req_tag, prompt, pos, shared)
         next_tag = [1]
+        n_trunc = [0]
         swapped = []                # host swap buffer: (state, js, payload)
 
         def submit(lane):
@@ -304,6 +347,28 @@ class TestPoolFuzz:
         def finish(lane):
             arena.apply(pool.lane_release(lane))
             lane_req[lane] = None
+
+        def truncate(lane):
+            # speculative-rejection shape: the engine only ever rolls back
+            # decode positions, so keep >= len(prompt) + 1 (the prompt and
+            # its tree registration are never withdrawn)
+            tag, prompt, pos, shared = lane_req[lane]
+            floor = len(prompt) + 1
+            if pos <= floor:
+                return step(lane)
+            keep = int(rng.integers(floor, pos))
+            before = arena.view_tags(lane, keep)
+            arena.apply(pool.truncate(lane, keep, pos))
+            n_trunc[0] += 1
+            # kept span byte-for-byte untouched (incl. tree-held prompt
+            # slots sharing the boundary page with the cleared tail)
+            assert arena.view_tags(lane, keep) == before
+            # rejected span withdrawn: unmapped entirely, or -1-masked on
+            # the surviving boundary page
+            for p in range(keep, pos):
+                pid = int(pool.table[lane, p // ps])
+                assert pid == 0 or arena.tag[pid, p % ps] == -1, (keep, p)
+            lane_req[lane][2] = keep
 
         def preempt(lane):
             # the pre-swap view must be read while the lane's table still
@@ -347,6 +412,8 @@ class TestPoolFuzz:
                 preempt(lane)
             elif op < 0.35 and pool.tree_pages:
                 arena.apply(pool.flush_tree())
+            elif op < 0.5:
+                truncate(lane)
             else:
                 step(lane)
             pool.check()
@@ -375,3 +442,4 @@ class TestPoolFuzz:
         assert pool.stats["cow_copies"] > 0        # and did diverge in-page
         assert pool.stats["swap_outs"] > 0         # and did preempt + swap
         assert pool.stats["swap_ins"] == pool.stats["swap_outs"]
+        assert n_trunc[0] > 0                      # and did roll back
