@@ -111,6 +111,7 @@ def _run_rows(small: bool, reps: int, backend: str,
     families = [
         ("int8_gemm", lambda: _gemm_family(reps, backend, gemm_shapes)),
         ("gated_mlp", lambda: _gated_mlp_family(reps, backend, gemm_shapes)),
+        ("gemm_w4a8", lambda: _w4a8_family(reps, backend, gemm_shapes)),
         ("int_softmax", lambda: _softmax_family(
             reps, backend, [(16, 256)] if small else [(16, 256),
                                                       (64, 1024)])),
@@ -237,6 +238,85 @@ def _gated_mlp_family(reps, backend, shapes):
              f"intermediate_bytes={2*m*n*2}"))
         rows.append((f"kernel/gated_mlp_fused_bf16_{m}x{k}x{n}/{backend}",
                      us_f, "intermediate_bytes=0"))
+    return rows
+
+
+def _w4a8_family(reps, backend, shapes):
+    """Packed-int4 GEMM family: in-kernel nibble unpack + two-level dequant
+    vs the unfused unpack -> int8 group-GEMM composition.
+
+    The fused side never widens the weight stream: packed bytes go HBM ->
+    VMEM -> registers.  The unfused side materializes the int8 weight
+    tensor (k*n bytes) between dispatches — the real cost of keeping
+    weights packed only at rest.  The gated pair additionally shares one A
+    tile across both weight streams, like the w8a8 dual-GEMM row above.
+    """
+    from repro.kernels.quantize import pack_int4, unpack_int4
+    rows = []
+    group = 64
+    s_act = 8.0 / 127.0
+    for m, k, n in shapes:
+        rng = np.random.default_rng(SEED)
+        xq = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+        xs = jnp.asarray(np.abs(rng.normal(size=(m, 1))) * 0.01 + 1e-4,
+                         jnp.float32)
+
+        def w4_leaf():
+            w4 = pack_int4(jnp.asarray(rng.integers(-8, 8, (k, n)),
+                                       jnp.int8))
+            qm = jnp.asarray(rng.integers(1, 128, (k // group, n)), jnp.int8)
+            ws = jnp.asarray(np.abs(rng.normal(size=(n,))) * 0.001 + 1e-4,
+                             jnp.float32)
+            return w4, qm, ws
+
+        w4, qm, ws = w4_leaf()
+        unpack_d = jax.jit(lambda p: unpack_int4(p, k))
+
+        # unfused group-GEMM over the WIDENED weights: per-group int32 dot,
+        # int8-multiplier combine, one float rescale (ref semantics, jitted
+        # as a single dispatch so only the unpack is a separate kernel)
+        def _combine(a, w8, qmv, wsv, asv):
+            aw = a.astype(jnp.int32).reshape(m, k // group, group)
+            ww = w8.astype(jnp.int32).reshape(k // group, group, n)
+            parts = jnp.einsum("mgk,gkn->gmn", aw, ww)
+            acc = jnp.sum(parts * qmv.astype(jnp.int32)[:, None, :], axis=0)
+            return (acc.astype(jnp.float32) * wsv * asv).astype(jnp.bfloat16)
+
+        combine_d = jax.jit(_combine)
+        us_f, us_u = _time_pair(
+            jax.jit(lambda a, asv: ops.gemm_w4a8(a, asv, w4, qm, ws)),
+            lambda a, asv: combine_d(a, unpack_d(w4), qm, ws, asv),
+            xq, xs, reps=10 * reps)
+        rows.append(
+            (f"kernel/gemm_w4a8_unfused_{m}x{k}x{n}_g{group}/{backend}",
+             us_u, f"int8_weight_bytes={k*n}"))
+        rows.append(
+            (f"kernel/gemm_w4a8_fused_{m}x{k}x{n}_g{group}/{backend}",
+             us_f, "int8_weight_bytes=0"))
+
+        # gated pair: fused dual packed-int4 GEMM vs unpack x2 -> combine
+        # GEMM x2 -> integer activation * multiply
+        u4, um, us_ = w4_leaf()
+        g4, gm, gs_ = w4_leaf()
+        act_d = jax.jit(lambda g, h: (ops.silu_i8(
+            jnp.clip(jnp.round(g.astype(jnp.float32) / s_act),
+                     -128, 127).astype(jnp.int32), s_act)
+            .astype(jnp.float32) * ops.silu_out_scale(s_act)
+            ).astype(jnp.bfloat16) * h)
+        us_f, us_u = _time_pair(
+            jax.jit(lambda a, asv: ops.gated_mlp_w4a8(
+                a, asv, u4, um, us_, g4, gm, gs_, act="silu",
+                act_scale=s_act)),
+            lambda a, asv: act_d(
+                combine_d(a, unpack_d(g4), gm, gs_, asv),
+                combine_d(a, unpack_d(u4), um, us_, asv)),
+            xq, xs, reps=10 * reps)
+        rows.append(
+            (f"kernel/gatedmlp_w4a8_unfused_{m}x{k}x{n}_g{group}/{backend}",
+             us_u, f"int8_weight_bytes={2*k*n};intermediate_bytes={2*m*n*2}"))
+        rows.append(
+            (f"kernel/gatedmlp_w4a8_fused_{m}x{k}x{n}_g{group}/{backend}",
+             us_f, "int8_weight_bytes=0"))
     return rows
 
 
@@ -426,6 +506,34 @@ def sweep(backend: str = "pallas", families: tuple[str, ...] = (),
             pad_to(x8, (bm, bk)), pad_to(w8, (bk, bn)),
             pad_to(w8b, (bk, bn)), act="silu", out_dtype=jnp.int32,
             bm=bm, bn=bn, bk=bk))))
+
+    # packed-int4 W4A8 twins: same lattice restricted to group-aligned bk
+    from repro.kernels.int8_gemm import dual_int4_gemm_gated, int4_gemm
+    from repro.kernels.quantize import pack_int4
+    g4_ = 64
+    w4s = pack_int4(jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8))
+    w4g = pack_int4(jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8))
+    qmu = jnp.asarray(rng.integers(1, 128, (k // g4_, n)), jnp.int8)
+    qmg = jnp.asarray(rng.integers(1, 128, (k // g4_, n)), jnp.int8)
+    ws4 = jnp.asarray(np.abs(rng.normal(size=(1, n))) * 0.001 + 1e-4,
+                      jnp.float32)
+    xs4 = jnp.asarray(np.abs(rng.normal(size=(m, 1))) * 0.01 + 1e-4,
+                      jnp.float32)
+    w4_cands = [c for c in gemm_cands(m, k, n) if c[2] % g4_ == 0]
+    entries.append((
+        f"gemm_w4a8/{m}x{k}x{n}/g{g4_}/{backend}", w4_cands,
+        _sweep_timer(lambda bm, bn, bk: int4_gemm(
+            pad_to(x8, (bm, bk)), pad_to(w4s, (bk // 2, bn)),
+            pad_to(qmu, (bk // g4_, bn)), pad_to(ws4, (1, bn)),
+            pad_to(xs4, (bm, 1)), group=g4_, bm=bm, bn=bn, bk=bk))))
+    entries.append((
+        f"gatedmlp_w4a8/{m}x{k}x{n}/g{g4_}/{backend}", w4_cands,
+        _sweep_timer(lambda bm, bn, bk: dual_int4_gemm_gated(
+            pad_to(x8, (bm, bk)), pad_to(w4s, (bk // 2, bn)),
+            pad_to(qmu, (bk // g4_, bn)), pad_to(ws4, (1, bn)),
+            pad_to(w4g, (bk // 2, bn)), pad_to(qmg, (bk // g4_, bn)),
+            pad_to(ws4, (1, bn)), pad_to(xs4, (bm, 1)), group=g4_,
+            act="silu", act_scale=8.0 / 127.0, bm=bm, bn=bn, bk=bk))))
 
     # flash attention + PV-dequant variant
     s, d = 64, 64

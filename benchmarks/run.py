@@ -77,25 +77,35 @@ def _write_json(path: str, rows: list[tuple], meta: dict,
 def _decode_perf_gate(path: str) -> None:
     """Perf regression gate (ROADMAP): w8a8 decode must stay FASTER than
     bf16 decode for every arch pair the artifact tracks — the whole point
-    of the int8 serving path.  Reads the final merged artifact so smoke
-    runs gate against the committed trajectory too; prints the headroom
-    (currently ~8x) so regressions are visible before they flip the sign.
+    of the int8 serving path — and w4a8 decode must stay faster than its
+    w8a8 twin (the packed weight stream has to pay for its in-kernel
+    unpack, or the format is dead weight; e2e_bench times the twins
+    interleaved so the few-percent margin is load-noise-proof).  Reads the
+    final merged artifact so smoke runs gate against the committed
+    trajectory too; prints the headroom so regressions are visible before
+    they flip the sign.
     """
     with open(os.path.join(REPO_ROOT, path)) as f:
         entries = json.load(f).get("entries", {})
-    pairs = [(k, k[: -len("_bf16")] + "_w8a8") for k in entries
-             if k.startswith("e2e/decode_") and k.endswith("_bf16")
-             and k[: -len("_bf16")] + "_w8a8" in entries]
-    for bkey, wkey in sorted(pairs):
-        b_us, w_us = entries[bkey]["us"], entries[wkey]["us"]
-        ratio = b_us / max(w_us, 1e-9)
-        print(f"decode gate: {wkey} {w_us}us vs {bkey} {b_us}us "
-              f"({ratio:.1f}x headroom)")
-        if w_us >= b_us:
-            raise SystemExit(
-                f"PERF regression: {wkey} ({w_us}us) is not faster than "
-                f"{bkey} ({b_us}us) — the w8a8 decode path lost its edge")
-    if not pairs:
+    ladders = [("_bf16", "_w8a8", "the w8a8 decode path lost its edge"),
+               ("_w8a8", "_w4a8", "the packed-int4 weight path no longer "
+                                  "pays for its unpack")]
+    seen = 0
+    for base_sfx, fast_sfx, why in ladders:
+        pairs = [(k, k[: -len(base_sfx)] + fast_sfx) for k in entries
+                 if k.startswith("e2e/decode_") and k.endswith(base_sfx)
+                 and k[: -len(base_sfx)] + fast_sfx in entries]
+        seen += len(pairs)
+        for bkey, wkey in sorted(pairs):
+            b_us, w_us = entries[bkey]["us"], entries[wkey]["us"]
+            ratio = b_us / max(w_us, 1e-9)
+            print(f"decode gate: {wkey} {w_us}us vs {bkey} {b_us}us "
+                  f"({ratio:.1f}x headroom)")
+            if w_us >= b_us:
+                raise SystemExit(
+                    f"PERF regression: {wkey} ({w_us}us) is not faster "
+                    f"than {bkey} ({b_us}us) — {why}")
+    if not seen:
         print("decode gate: no decode pairs in artifact (fresh checkout)")
 
 

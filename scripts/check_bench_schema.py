@@ -5,29 +5,54 @@ merge semantics cannot lose keys by construction — this check closes the
 loop end to end: whatever the working tree did to the artifacts, every key
 the committed trajectory tracks must still be present.
 
+On top of the superset check, a few key FAMILIES are required outright
+(``REQUIRED`` below): the superset check alone cannot demand keys the
+baseline never had, so a PR introducing a bench family also lists it here
+and the gate fails until the artifacts actually carry it.
+
 Usage: python scripts/check_bench_schema.py
 """
 import json
 import os
+import re
 import subprocess
 import sys
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
+# every current artifact must match each pattern at least once
+REQUIRED = {
+    "BENCH_kernels.json": [
+        r"^kernel/gemm_w4a8_fused_",      # packed-int4 GEMM family
+        r"^kernel/gemm_w4a8_unfused_",
+        r"^kernel/gatedmlp_w4a8_fused_",  # packed-int4 dual-GEMM family
+        r"^kernel/gatedmlp_w4a8_unfused_",
+    ],
+    "BENCH_e2e.json": [
+        r"^e2e/decode_.*_w4a8$",          # w4a8-vs-w8a8 decode gate rows
+        r"^e2e/decode_.*_w8a8$",
+    ],
+}
+
 
 def main() -> None:
     ok = True
     for name in ("BENCH_kernels.json", "BENCH_e2e.json"):
+        with open(os.path.join(REPO, name)) as f:
+            cur = json.load(f).get("entries", {})
+        for pat in REQUIRED.get(name, []):
+            if not any(re.search(pat, k) for k in cur):
+                print(f"FAIL: {name} has no key matching required family "
+                      f"{pat!r}", file=sys.stderr)
+                ok = False
         try:
             out = subprocess.run(
                 ["git", "show", f"HEAD:{name}"], capture_output=True,
                 text=True, check=True, cwd=REPO).stdout
             prev = json.loads(out).get("entries", {})
         except (subprocess.CalledProcessError, ValueError):
-            print(f"  {name}: no committed baseline, skipping")
+            print(f"  {name}: no committed baseline, skipping diff")
             continue
-        with open(os.path.join(REPO, name)) as f:
-            cur = json.load(f).get("entries", {})
         missing = sorted(set(prev) - set(cur))
         if missing:
             print(f"FAIL: {name} lost keys vs HEAD: {missing}",
@@ -38,7 +63,7 @@ def main() -> None:
                   f"{len(prev)}")
     if not ok:
         raise SystemExit(1)
-    print("BENCH schema stable vs HEAD")
+    print("BENCH schema stable vs HEAD (required families present)")
 
 
 if __name__ == "__main__":

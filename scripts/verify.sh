@@ -11,7 +11,10 @@
 # tiny pool: zero leaks, >=1 preemption + swap round trip, outputs
 # bit-identical to an unconstrained offline drain), a self-speculative
 # equivalence smoke (spec_k in {2,4} x dense/paged: bit-identical to
-# vanilla greedy with nonzero draft acceptance), and a doc link check.
+# vanilla greedy with nonzero draft acceptance), a W4A8 serving drain plus
+# a fused-vs-unfused packed-int4 equivalence smoke (in-kernel nibble
+# dequant bit-identical to the widened int8-GEMM composition on the same
+# backend), and a doc link check.
 #
 # The pytest tier runs `-m "not slow"`: the heaviest equivalence-matrix
 # cases (int8/chunked sub-matrices in tests/test_speculative.py) carry
@@ -48,6 +51,13 @@ PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --reduced \
 echo "== SwiGLU w8a8 serving drain smoke (fused dual-GEMM gated MLP) =="
 PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b --reduced \
     --w8a8 --requests 4 --max-new 4 --lanes 2 --max-seq 64 --token-budget 8
+
+echo "== W4A8 serving drain smoke (packed-int4 weights, PTQ policy) =="
+PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b --reduced \
+    --w4a8 --requests 4 --max-new 4 --lanes 2 --max-seq 64 --token-budget 8
+
+echo "== W4A8 fused-vs-unfused packed-drain equivalence smoke =="
+PYTHONPATH=src python scripts/w4a8_equiv_smoke.py
 
 echo "== packed/chunked/tokenwise greedy-equivalence smoke =="
 PYTHONPATH=src python scripts/greedy_equiv_smoke.py

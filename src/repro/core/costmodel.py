@@ -158,6 +158,62 @@ def gated_mlp_tile_cost(m: int, k: int, n: int, bm: int, bn: int, bk: int,
     return max(compute, hbm) + steps * TPU_GRID_STEP_CYCLES
 
 
+TPU_VPU_OPS_PER_CYCLE = 8 * 128        # one 8x128 vreg lanewise op per cycle
+
+
+def gemm_w4a8_tile_cost(m: int, k: int, n: int, group: int,
+                        bm: int, bn: int, bk: int,
+                        out_bytes: int = 2) -> float:
+    """Estimated cycles for the W4A8 GEMM with tile (bm, bn, bk).
+
+    Differs from ``gemm_tile_cost`` in three modeled terms:
+      * the weight stream is HALF width — (bk/2, bn) packed bytes plus a
+        small (bk/group, bn) int8 group-multiplier tile per step (the f32
+        scale is per-column, amortized over the whole K loop);
+      * a VPU nibble-unpack term: ~3 lanewise ops per packed byte (two
+        shifts sign-extend the low nibble, one the high) plus the widened
+        int8 tile living in VMEM alongside the packed one;
+      * a per-group int32 multiplier-accumulate of the (bm, bn) partial —
+        (bk/group) * 2 VPU ops per output element per step.
+    """
+    gm, gn, gk = _cdiv(m, bm), _cdiv(n, bn), _cdiv(k, bk)
+    w_bytes = (bk // 2) * bn + (bk // group) * bn
+    vmem = (2 * (bm * bk + w_bytes)     # double-buffered x + packed w/scales
+            + bk * bn                   # in-register unpacked weight tile
+            + bm * bn * (4 + out_bytes))
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    steps = gm * gn * gk
+    mxu = steps * (bm * bn * bk) / TPU_MACS_PER_CYCLE
+    unpack = steps * 3 * (bk // 2) * bn / TPU_VPU_OPS_PER_CYCLE
+    grp = steps * (bk // group) * 2 * bm * bn / TPU_VPU_OPS_PER_CYCLE
+    hbm = (steps * (bm * bk + w_bytes)
+           + gm * gn * bm * bn * out_bytes) / TPU_HBM_BYTES_PER_CYCLE
+    return max(mxu + unpack + grp, hbm) + steps * TPU_GRID_STEP_CYCLES
+
+
+def gated_mlp_w4a8_tile_cost(m: int, k: int, n: int, group: int,
+                             bm: int, bn: int, bk: int,
+                             out_bytes: int = 2) -> float:
+    """Estimated cycles for the W4A8 dual-GEMM gated MLP: the W4A8 terms of
+    ``gemm_w4a8_tile_cost`` with TWO packed weight + multiplier streams
+    sharing one A tile and two resident int32 accumulators."""
+    gm, gn, gk = _cdiv(m, bm), _cdiv(n, bn), _cdiv(k, bk)
+    w_bytes = 2 * ((bk // 2) * bn + (bk // group) * bn)
+    vmem = (2 * (bm * bk + w_bytes)
+            + 2 * bk * bn                # two unpacked weight tiles
+            + 2 * bm * bn * 4 + bm * bn * out_bytes)
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+    steps = gm * gn * gk
+    mxu = steps * 2 * (bm * bn * bk) / TPU_MACS_PER_CYCLE
+    unpack = steps * 2 * 3 * (bk // 2) * bn / TPU_VPU_OPS_PER_CYCLE
+    grp = steps * (bk // group) * 2 * 2 * bm * bn / TPU_VPU_OPS_PER_CYCLE
+    hbm = (steps * (bm * bk + w_bytes)
+           + gm * gn * bm * bn * out_bytes) / TPU_HBM_BYTES_PER_CYCLE
+    return max(mxu + unpack + grp, hbm) + steps * TPU_GRID_STEP_CYCLES
+
+
 # MoE dispatch constants: per-direction all-to-all bandwidth on the model
 # axis (ICI, v5e-class ballpark) and the fixed fan-out latency one grouped
 # all-to-all pays regardless of payload.  Global constants, never per-arch.

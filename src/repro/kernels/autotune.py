@@ -78,6 +78,8 @@ def reset_measured_cache() -> None:
     _MEASURED = None
     gemm_blocks.cache_clear()
     gated_mlp_blocks.cache_clear()
+    gemm_w4a8_blocks.cache_clear()
+    gatedmlp_w4a8_blocks.cache_clear()
     attention_blocks.cache_clear()
     attention_pv_blocks.cache_clear()
     packed_blocks.cache_clear()
@@ -168,6 +170,43 @@ def gated_mlp_blocks(m: int, k: int, n: int, dtype: str = "int8",
     return _gemm_lattice_argmin(
         m, k, n, lambda bm, bn, bk: costmodel.gated_mlp_tile_cost(
             m, k, n, bm, bn, bk, in_bytes=in_bytes, out_bytes=2))
+
+
+@functools.lru_cache(maxsize=4096)
+def gemm_w4a8_blocks(m: int, k: int, n: int, group: int,
+                     backend: str = "pallas") -> tuple[int, int, int]:
+    """(bm, bn, bk) for the packed-int4 W4A8 GEMM (``int4_gemm``).
+
+    Its own key family, keyed on the scale group size: the half-width
+    weight stream shifts the HBM roofline and the nibble-unpack +
+    per-group accumulate terms (costmodel.gemm_w4a8_tile_cost) add VPU
+    cost that grows as the group shrinks.  bk must be a multiple of the
+    group so scale groups never straddle K blocks.
+    """
+    hit = _hit(f"gemm_w4a8/{m}x{k}x{n}/g{group}/{backend}")
+    if hit:
+        return hit
+    return _gemm_lattice_argmin(
+        m, k, n, lambda bm, bn, bk: (
+            float("inf") if bk % group else costmodel.gemm_w4a8_tile_cost(
+                m, k, n, group, bm, bn, bk)))
+
+
+@functools.lru_cache(maxsize=4096)
+def gatedmlp_w4a8_blocks(m: int, k: int, n: int, group: int,
+                         backend: str = "pallas") -> tuple[int, int, int]:
+    """(bm, bn, bk) for the W4A8 dual-GEMM gated MLP
+    (``dual_int4_gemm_gated``): two packed weight + multiplier streams and
+    two resident int32 accumulators change the VMEM wall and roofline relative
+    to both the ``gemm_w4a8`` and ``gatedmlp`` tables."""
+    hit = _hit(f"gatedmlp_w4a8/{m}x{k}x{n}/g{group}/{backend}")
+    if hit:
+        return hit
+    return _gemm_lattice_argmin(
+        m, k, n, lambda bm, bn, bk: (
+            float("inf") if bk % group
+            else costmodel.gated_mlp_w4a8_tile_cost(
+                m, k, n, group, bm, bn, bk)))
 
 
 # GShard group-size candidates for the MoE dispatch tuner (tokens/group)

@@ -24,6 +24,22 @@ tile).  Block sizes come from ``kernels.autotune``.
 ``dual_gemm_gated`` extends the same structure to the 2-GEMM gated MLP
 (SwiGLU/GeGLU): one shared A-tile stream, two weight streams, two resident
 accumulators, and a dequant + integer-activation(gate) * up epilogue.
+
+``int4_gemm`` / ``dual_int4_gemm_gated`` are the W4A8 twins: the weight
+stream is half-width (two int4 values per byte, ``quantize.pack_int4``
+layout) plus a small (K/g, N) int8 group-multiplier stream and a (N,)
+per-column f32 scale (two-level scales; see ``layers.quantize_weight_w4``).
+Each K block is nibble-unpacked in-register (the packed bytes never widen
+in HBM), contracted on the MXU one scale group at a time, and multiplier-
+accumulated into a resident INT32 tile: ``acc += part * qmul[g]`` stays
+integer, so the group combine is exact and order-independent — XLA's
+freedom to FMA-contract or reorder f32 chains cannot perturb it, and the
+kernel is bit-identical to the unfused unpack -> int8-GEMM composition
+(``ref.gemm_w4a8_ref``) on any backend.  The single float rescale
+``acc * w_scale * x_scale`` happens once in the epilogue (a mul-only
+chain, same shape as the W8A8 ``scaled`` epilogue).  Headroom:
+K/g * (g*128*8) * 127 < 2^31 for every supported shape (asserted at
+trace time).  Epilogues reuse the scaled family above.
 """
 from __future__ import annotations
 
@@ -331,5 +347,286 @@ def dual_gemm_gated(
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype),
                         pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret_mode() if interpret is None else interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# W4A8: packed-int4 weight stream, in-register nibble unpack, two-level
+# group scales (per-column f32 x per-group int8 multiplier).  The group
+# combine stays in the int32 accumulator — exact and order-independent, so
+# fused == unfused holds bit-for-bit regardless of how the compiler
+# reassociates (f32 group-scale accumulation is NOT deterministic under
+# XLA's FMA contraction + loop reordering).  Only the ``scaled`` epilogue
+# family applies: one float multiply chain past the integer contract,
+# exactly the W8A8 epilogue shape.
+# ---------------------------------------------------------------------------
+
+W4A8_EPILOGUES = ("scaled", "scaled_gelu", "scaled_add")
+
+
+def _unpack_block(packed, bk):
+    """(bk//2, bn) packed int8 -> (bk, bn) sign-extended int8, in-register.
+
+    Same nibble layout as ``quantize.pack_int4``: low nibble = even K row,
+    high nibble = odd K row.  Three VPU ops (two shifts sign-extend the low
+    nibble, one the high) plus an interleave.
+    """
+    lo = jnp.right_shift(jnp.left_shift(packed, 4), 4)
+    hi = jnp.right_shift(packed, 4)
+    return jnp.stack([lo, hi], axis=1).reshape(bk, packed.shape[-1])
+
+
+def _w4a8_kernel(*refs, n_k: int, epilogue: str, gelu_scale: float,
+                 g_s1: int, g_mult: int, g_s2: int, group: int, bk: int,
+                 has_bias: bool, has_res: bool, stream_dtype):
+    it = iter(refs)
+    x_ref, w_ref, qm_ref = next(it), next(it), next(it)
+    ws_ref, xs_ref = next(it), next(it)
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_res else None
+    out_ref, acc_ref = next(it), next(it)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = _unpack_block(w_ref[...], bk)
+    qm = qm_ref[...].astype(I32)  # (bk // group, bn) int8 group multipliers
+    # one MXU contraction per scale group; the int8 group multiplier folds
+    # in WITHOUT leaving the int32 accumulator, so the combine is exact and
+    # order-independent — bit-identical to the unfused unpack -> int8-GEMM
+    # -> integer-combine reference by construction.
+    for gi in range(bk // group):
+        part = jax.lax.dot_general(
+            x[:, gi * group:(gi + 1) * group],
+            w[gi * group:(gi + 1) * group],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=I32)
+        acc_ref[...] += part * qm[gi]
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        h = acc_ref[...].astype(F32) * ws_ref[...] * xs_ref[...]
+        if has_bias:
+            h = h + b_ref[...]
+        if epilogue == "scaled_gelu":
+            h = h.astype(stream_dtype).astype(F32)
+            q = jnp.clip(jnp.round(h / gelu_scale), -128, 127).astype(I32)
+            out_ref[...] = gelu_block(
+                q, scale=gelu_scale, s1=g_s1, mult=g_mult,
+                s2=g_s2).astype(jnp.int8)
+        else:
+            h = h.astype(stream_dtype)
+            if epilogue == "scaled_add":
+                h = h + r_ref[...]
+            out_ref[...] = h
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group", "out_dtype", "bm", "bn", "bk", "epilogue",
+                     "gelu_scale", "interpret"),
+)
+def int4_gemm(
+    x: jax.Array,          # (M, K) int8 activations
+    w4: jax.Array,         # (K // 2, N) packed int4 weights
+    qmul: jax.Array,       # (K // group, N) int8 group multipliers
+    w_scale: jax.Array,    # (N,) f32 per-column scales
+    x_scale: jax.Array,    # (M, 1) f32 per-row act scales
+    group: int = 64,
+    epilogue: str = "scaled",
+    gelu_scale: float | None = None,
+    bias: jax.Array | None = None,      # (1, N) f32
+    residual: jax.Array | None = None,  # (M, N) stream dtype
+    out_dtype=jnp.bfloat16,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x[int8 M,K] @ unpack(w4)[int4 K,N] * two-level scales, fused W4A8."""
+    m, k = x.shape
+    kp, n = w4.shape
+    assert kp * 2 == k, (x.shape, w4.shape)
+    assert qmul.shape == (k // group, n), (qmul.shape, k, group, n)
+    assert qmul.dtype == jnp.int8 and w_scale.size == n, (qmul.dtype,
+                                                          w_scale.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"pad shapes to block multiples first: {(m, k, n)} vs {(bm, bk, bn)}")
+    assert bk % group == 0 and bk % 2 == 0, (bk, group)
+    assert group * 128 * 8 < 2 ** 24, group  # f32 exact-integer bound
+    assert k * 128 * 8 * 127 < 2 ** 31, k    # int32 combine headroom
+    assert epilogue in W4A8_EPILOGUES, epilogue
+    stream_dtype = out_dtype
+    if epilogue == "scaled_gelu":
+        out_dtype = jnp.int8
+    elif epilogue == "scaled_add":
+        out_dtype = jnp.promote_types(stream_dtype, residual.dtype)
+    g_s1 = g_mult = g_s2 = 0
+    if epilogue == "scaled_gelu":
+        assert gelu_scale is not None
+        gp = gelu_requant_params(gelu_scale)
+        g_s1, g_mult, g_s2 = gp.s1, gp.mult, gp.s2
+    has_bias = bias is not None
+    has_res = epilogue == "scaled_add"
+
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    operands = [x, w4, qmul, w_scale.reshape(1, n), x_scale]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+    ]
+    if has_bias:
+        operands.append(bias.reshape(1, n))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if has_res:
+        assert residual is not None and residual.shape == (m, n)
+        operands.append(residual)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+
+    kernel = functools.partial(
+        _w4a8_kernel, n_k=n_k, epilogue=epilogue,
+        gelu_scale=0.0 if gelu_scale is None else gelu_scale,
+        g_s1=g_s1, g_mult=g_mult, g_s2=g_s2, group=group, bk=bk,
+        has_bias=has_bias, has_res=has_res, stream_dtype=stream_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), I32)],
+        interpret=interpret_mode() if interpret is None else interpret,
+    )(*operands)
+
+
+def _dual_w4a8_kernel(*refs, n_k: int, act: str, act_scale: float,
+                      g_s1: int, g_mult: int, g_s2: int, group: int,
+                      bk: int, stream_dtype):
+    it = iter(refs)
+    x_ref, wu_ref, wg_ref = next(it), next(it), next(it)
+    um_ref, gm_ref = next(it), next(it)
+    us_ref, gs_ref, xs_ref = next(it), next(it), next(it)
+    out_ref, acc_u, acc_g = next(it), next(it), next(it)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_u[...] = jnp.zeros_like(acc_u)
+        acc_g[...] = jnp.zeros_like(acc_g)
+
+    # the shared A tile: ONE HBM read feeds both half-width weight streams
+    x = x_ref[...]
+    wu = _unpack_block(wu_ref[...], bk)
+    wg = _unpack_block(wg_ref[...], bk)
+    um, gm = um_ref[...].astype(I32), gm_ref[...].astype(I32)
+    for gi in range(bk // group):
+        xg = x[:, gi * group:(gi + 1) * group]
+        pu = jax.lax.dot_general(
+            xg, wu[gi * group:(gi + 1) * group],
+            (((1,), (0,)), ((), ())), preferred_element_type=I32)
+        pg = jax.lax.dot_general(
+            xg, wg[gi * group:(gi + 1) * group],
+            (((1,), (0,)), ((), ())), preferred_element_type=I32)
+        # the group multiplier folds in WITHOUT leaving int32 — exact and
+        # order-independent, same combine as _w4a8_kernel
+        acc_u[...] += pu * um[gi]
+        acc_g[...] += pg * gm[gi]
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        # integer contracts done; ONE float multiply chain per stream (the
+        # W8A8 dual epilogue shape), then stream-dtype casts, integer gate,
+        # multiply.
+        h = (acc_u[...].astype(F32) * us_ref[...]
+             * xs_ref[...]).astype(stream_dtype)
+        g = (acc_g[...].astype(F32) * gs_ref[...]
+             * xs_ref[...]).astype(stream_dtype).astype(F32)
+        q = jnp.clip(jnp.round(g / act_scale), -128, 127).astype(I32)
+        if act == "silu":
+            a = (silu_block(q, scale=act_scale).astype(F32)
+                 * silu_out_scale(act_scale)).astype(stream_dtype)
+        else:
+            a = (gelu_block(q, scale=act_scale, s1=g_s1, mult=g_mult,
+                            s2=g_s2).astype(F32)
+                 * gelu_out_scale(act_scale)).astype(stream_dtype)
+        out_ref[...] = a * h
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group", "act", "act_scale", "out_dtype", "bm", "bn",
+                     "bk", "interpret"),
+)
+def dual_int4_gemm_gated(
+    x: jax.Array,           # (M, K) int8 activations
+    up4: jax.Array,         # (K // 2, N) packed int4 up-proj
+    up_mul: jax.Array,      # (K // group, N) int8 group multipliers
+    up_scale: jax.Array,    # (N,) f32 per-column scales
+    gate4: jax.Array,       # (K // 2, N) packed int4 gate-proj
+    gate_mul: jax.Array,    # (K // group, N) int8 group multipliers
+    gate_scale: jax.Array,  # (N,) f32 per-column scales
+    x_scale: jax.Array,     # (M, 1) f32 per-row act scales
+    group: int = 64,
+    act: str = "silu",
+    act_scale: float | None = None,
+    out_dtype=jnp.bfloat16,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """activation(x @ gate4) * (x @ up4), both W4A8 GEMMs fused (shared A)."""
+    m, k = x.shape
+    kp, n = up4.shape
+    assert kp * 2 == k and gate4.shape == (kp, n), (x.shape, up4.shape,
+                                                    gate4.shape)
+    assert up_mul.shape == (k // group, n), (up_mul.shape, k, group, n)
+    assert gate_mul.shape == (k // group, n), gate_mul.shape
+    assert up_mul.dtype == jnp.int8 and gate_mul.dtype == jnp.int8
+    assert up_scale.size == n and gate_scale.size == n
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"pad shapes to block multiples first: {(m, k, n)} vs {(bm, bk, bn)}")
+    assert bk % group == 0 and bk % 2 == 0, (bk, group)
+    assert k * 128 * 8 * 127 < 2 ** 31, k    # int32 combine headroom
+    assert act in GATED_ACTS and act_scale is not None, (act, act_scale)
+    g_s1 = g_mult = g_s2 = 0
+    if act == "gelu":
+        gp = gelu_requant_params(act_scale)
+        g_s1, g_mult, g_s2 = gp.s1, gp.mult, gp.s2
+
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    operands = [x, up4, gate4, up_mul, gate_mul,
+                up_scale.reshape(1, n), gate_scale.reshape(1, n), x_scale]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+    ]
+    kernel = functools.partial(
+        _dual_w4a8_kernel, n_k=n_k, act=act, act_scale=act_scale,
+        g_s1=g_s1, g_mult=g_mult, g_s2=g_s2, group=group, bk=bk,
+        stream_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), I32),
+                        pltpu.VMEM((bm, bn), I32)],
         interpret=interpret_mode() if interpret is None else interpret,
     )(*operands)

@@ -10,7 +10,8 @@ be prohibitive).  ``set_backend("pallas"|"jnp")`` flips the default;
 real-TPU deployments use "pallas".
 
 Fused epilogue entry points (``gemm_i8_gelu``, ``gemm_i8_add``,
-``gemm_w8a8``, and the dual-GEMM ``gated_mlp``/``gated_mlp_w8a8``) keep
+``gemm_w8a8``, the dual-GEMM ``gated_mlp``/``gated_mlp_w8a8``, and their
+packed-int4 W4A8 twins ``gemm_w4a8``/``gated_mlp_w4a8``) keep
 the int32 GEMM accumulator in-register instead of round-tripping it
 through HBM between the matmul and its consumer; their jnp paths are the
 exact unfused compositions, so both backends are bit-identical (the
@@ -27,7 +28,8 @@ from .common import pad_to
 from .conv2d import int8_conv2d
 from .flash_attention import flash_attention
 from .int8_flash_attention import int8_flash_attention
-from .int8_gemm import dual_gemm_gated, int8_gemm
+from .int8_gemm import (dual_gemm_gated, dual_int4_gemm_gated, int4_gemm,
+                        int8_gemm)
 from .int_gelu import int_gelu, gelu_out_scale  # noqa: F401 (re-export)
 from .int_silu import int_silu, silu_out_scale  # noqa: F401 (re-export)
 from .int_layernorm import int_layernorm
@@ -196,6 +198,98 @@ def gated_mlp_w8a8(x_q: jax.Array, x_scale: jax.Array,
         x_scale=pad_to(xs2, (bm, 1)),
         up_scale=pad_to(up_scale.reshape(1, n), (1, bn)),
         gate_scale=pad_to(gate_scale.reshape(1, n), (1, bn)),
+        act=act, act_scale=act_scale, out_dtype=out_dtype,
+        bm=bm, bn=bn, bk=bk)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def _w4_group(k: int, qmul: jax.Array) -> int:
+    groups = qmul.shape[-2]
+    group = k // groups
+    assert group * groups == k, (k, qmul.shape)
+    return group
+
+
+def gemm_w4a8(x_q: jax.Array, x_scale: jax.Array, w4: jax.Array,
+              qmul: jax.Array, w_scale: jax.Array,
+              bias: jax.Array | None = None,
+              residual: jax.Array | None = None,
+              gelu_scale: float | None = None,
+              out_dtype=jnp.bfloat16) -> jax.Array:
+    """W4A8 linear: packed-int4 weights, in-kernel nibble unpack + two-level
+    group dequant, same fused epilogue family as ``gemm_w8a8``.
+
+    x_q [..., K] int8 with per-row scales x_scale [..., 1]; w4 [K/2, N]
+    packed int4 (``quantize.pack_int4`` layout) with int8 group multipliers
+    qmul [K/group, N] and per-column scales w_scale [N] (a group's
+    effective scale is ``w_scale * qmul``, so the group combine stays in
+    int32).  Bit-identical to the unfused unpack -> group-wise int8 GEMM ->
+    integer-combine composition (``ref.gemm_w4a8_ref``) on both backends.
+    """
+    x2, lead, m = _gemm_2d(x_q)
+    k = x2.shape[-1]
+    n = w4.shape[-1]
+    group = _w4_group(k, qmul)
+    xs2 = x_scale.reshape(-1, 1)
+    r2 = None if residual is None else residual.reshape(-1, n)
+    if not _use_pallas():
+        out = ref.gemm_w4a8_ref(x2, xs2, w4, qmul, w_scale, bias=bias,
+                                residual=r2, gelu_scale=gelu_scale,
+                                out_dtype=out_dtype)
+        return out.reshape(*lead, n)
+    bm, bn, bk = autotune.gemm_w4a8_blocks(m, k, n, group)
+    if gelu_scale is not None:
+        epi = "scaled_gelu"
+    elif r2 is not None:
+        epi = "scaled_add"
+    else:
+        epi = "scaled"
+    # zero-padding is exact: padded packed bytes are zero nibbles and their
+    # group multipliers are zero, so padded K contributes nothing
+    out = int4_gemm(
+        pad_to(x2, (bm, bk)), pad_to(w4, (bk // 2, bn)),
+        pad_to(qmul, (bk // group, bn)),
+        pad_to(w_scale.reshape(1, n), (1, bn)),
+        pad_to(xs2, (bm, 1)), group=group,
+        epilogue=epi, gelu_scale=gelu_scale,
+        bias=None if bias is None else pad_to(bias.reshape(1, n), (1, bn)),
+        residual=None if r2 is None else pad_to(r2, (bm, bn)),
+        out_dtype=out_dtype, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def gated_mlp_w4a8(x_q: jax.Array, x_scale: jax.Array,
+                   up4: jax.Array, up_mul: jax.Array, up_scale: jax.Array,
+                   gate4: jax.Array, gate_mul: jax.Array,
+                   gate_scale: jax.Array,
+                   act: str = "silu", act_scale: float | None = None,
+                   out_dtype=jnp.bfloat16) -> jax.Array:
+    """Fused W4A8 dual-GEMM gated MLP: two packed-int4 weight streams share
+    one A tile; unpack + two-level group dequant + integer activation(gate)
+    * up all run in-kernel.  Bit-identical to the unfused ``gemm_w4a8 x2 ->
+    silu_i8/gelu_i8 -> multiply`` composition (``ref.gated_mlp_w4a8_ref``).
+    """
+    assert act_scale is not None, "integer gated MLP needs a static act_scale"
+    x2, lead, m = _gemm_2d(x_q)
+    k = x2.shape[-1]
+    n = up4.shape[-1]
+    group = _w4_group(k, up_mul)
+    assert gate_mul.shape == up_mul.shape, (gate_mul.shape, up_mul.shape)
+    xs2 = x_scale.reshape(-1, 1)
+    if not _use_pallas():
+        out = ref.gated_mlp_w4a8_ref(x2, xs2, up4, up_mul, up_scale,
+                                     gate4, gate_mul, gate_scale, act=act,
+                                     act_scale=act_scale,
+                                     out_dtype=out_dtype)
+        return out.reshape(*lead, n)
+    bm, bn, bk = autotune.gatedmlp_w4a8_blocks(m, k, n, group)
+    out = dual_int4_gemm_gated(
+        pad_to(x2, (bm, bk)),
+        pad_to(up4, (bk // 2, bn)), pad_to(up_mul, (bk // group, bn)),
+        pad_to(up_scale.reshape(1, n), (1, bn)),
+        pad_to(gate4, (bk // 2, bn)), pad_to(gate_mul, (bk // group, bn)),
+        pad_to(gate_scale.reshape(1, n), (1, bn)),
+        pad_to(xs2, (bm, 1)), group=group,
         act=act, act_scale=act_scale, out_dtype=out_dtype,
         bm=bm, bn=bn, bk=bk)
     return out[:m, :n].reshape(*lead, n)

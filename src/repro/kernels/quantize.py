@@ -5,6 +5,14 @@ pass: row reduce + scale + round + clip, matching the PTQ activation path).
 ``requantize_i32``: int32 -> int8 via the shift/mul16/shift scheme — the
 exact Table-II ``quant`` kernel (int16/int32 input on the 32-bit operator
 path, §IV-A-1).
+
+``pack_int4`` / ``unpack_int4``: the W4A8 weight container — two int4
+values per int8 byte along the contraction dim (byte i holds rows 2i and
+2i+1 of the weight: low nibble = even row, high nibble = odd row), so a
+K-blocked GEMM streams each packed byte exactly once.  These are PTQ- /
+host-side helpers (plain jnp, not kernels); the GEMM kernels unpack the
+same layout in-register and ``kernels.ref.unpack_int4_ref`` is the
+independent oracle both are tested against.
 """
 from __future__ import annotations
 
@@ -62,6 +70,41 @@ def _requant_kernel(x_ref, out_ref, *, s1: int, mult: int, s2: int):
     if s2 > 0:
         acc = (acc + (1 << (s2 - 1))) >> s2
     out_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def pack_int4(w4: jax.Array) -> jax.Array:
+    """int8 [..., K, N] with values in [-8, 7] -> packed int8 [..., ceil(K/2), N].
+
+    Byte i holds contraction rows 2i (low nibble) and 2i+1 (high nibble).
+    Odd K is padded with a zero nibble; ``unpack_int4(packed, k)`` slices
+    it back off.  int8 left-shift wraps mod 256, which is exactly the
+    nibble placement we want (e.g. -8 << 4 == -128).
+    """
+    assert w4.dtype == jnp.int8, w4.dtype
+    k = w4.shape[-2]
+    if k % 2:
+        pad = [(0, 0)] * w4.ndim
+        pad[-2] = (0, 1)
+        w4 = jnp.pad(w4, pad)
+    lo = w4[..., 0::2, :]
+    hi = w4[..., 1::2, :]
+    return jnp.bitwise_or(jnp.left_shift(hi, 4), jnp.bitwise_and(lo, 0xF))
+
+
+def unpack_int4(packed: jax.Array, k: int) -> jax.Array:
+    """packed int8 [..., ceil(K/2), N] -> sign-extended int8 [..., K, N].
+
+    Low nibble: shift up then arithmetic-shift down (sign-extends in two
+    vector ops); high nibble: one arithmetic shift.  Interleave restores
+    the original row order.  Bit-exact against ``ref.unpack_int4_ref``.
+    """
+    lo = jnp.right_shift(jnp.left_shift(packed, 4), 4)
+    hi = jnp.right_shift(packed, 4)
+    kp = packed.shape[-2]
+    n = packed.shape[-1]
+    w = jnp.stack([lo, hi], axis=-2)  # [..., kp, 2, N]
+    w = w.reshape(*packed.shape[:-2], 2 * kp, n)
+    return w[..., :k, :]
 
 
 @functools.partial(jax.jit, static_argnames=("params", "bm", "bn", "interpret"))

@@ -105,6 +105,93 @@ def gated_mlp_w8a8_ref(x_q, x_scale, w_up_q, up_scale, w_gate_q, gate_scale,
     return a * h
 
 
+def unpack_int4_ref(packed, k):
+    """Oracle for the int4 nibble container: packed int8 [..., ceil(K/2), N]
+    -> sign-extended int8 [..., K, N].  Written with modular arithmetic (no
+    shifts) so it is independent of ``quantize.unpack_int4``: the low
+    nibble is ``((b & 0xF) ^ 8) - 8`` and the high nibble is a floor
+    division by 16 (== arithmetic shift)."""
+    p = packed.astype(I32)
+    lo = jnp.bitwise_xor(jnp.bitwise_and(p, 0xF), 8) - 8
+    hi = jnp.floor_divide(p, 16)
+    kp, n = packed.shape[-2], packed.shape[-1]
+    w = jnp.stack([lo, hi], axis=-2).reshape(*packed.shape[:-2], 2 * kp, n)
+    return w[..., :k, :].astype(jnp.int8)
+
+
+def gemm_w4a8_ref(x_q, x_scale, w4, qmul, w_scale, bias=None, residual=None,
+                  gelu_scale=None, out_dtype=jnp.bfloat16):
+    """Unfused W4A8 linear: nibble-unpack -> per-group int8xint4 GEMM ->
+    INTEGER group combine -> one float rescale (-> int GELU | + res).
+
+    Two-level group scales: a group's effective scale is ``w_scale[n] *
+    qmul[g, n]`` (per-column f32 x per-group int8 multiplier).  The group
+    combine ``sum_g part_g * qmul_g`` therefore stays in int32 — exact and
+    order-independent, so fused and unfused agree bit for bit no matter how
+    the compiler reassociates (a direct f32 scale accumulation is NOT
+    deterministic: XLA contracts mul+add chains into FMAs and reorders
+    them).  Only then does ONE float multiply chain apply ``w_scale *
+    x_scale`` — the same epilogue shape as gemm_w8a8_ref.
+
+    The per-group partial GEMM runs in f32: with |x| <= 128 and |w| <= 8 a
+    group partial sum is bounded by g * 1024 <= 2^17 for g <= 128 — inside
+    f32's 2^24 exact-integer range — so the f32 dot yields EXACTLY the
+    int32 GEMM's integers while using the fast float matmul units, and the
+    int32 cast back is exact.  ``k * 1024 * 127 < 2^31`` bounds the
+    combined accumulator (asserted; both sides would wrap identically past
+    it, but the guardrail keeps the math overflow-free).
+    """
+    k = x_q.shape[-1]
+    groups = qmul.shape[-2]
+    g = k // groups
+    assert g * groups == k and g * 128 * 8 < 2 ** 24, (k, groups)
+    assert k * 128 * 8 * 127 < 2 ** 31, k  # int32 combine headroom
+    w = unpack_int4_ref(w4, k).astype(jnp.float32)
+    xf = x_q.astype(jnp.float32)
+    acc = jnp.zeros((*x_q.shape[:-1], w4.shape[-1]), I32)
+    for gi in range(groups):
+        part = jax.lax.dot_general(
+            xf[..., gi * g:(gi + 1) * g], w[gi * g:(gi + 1) * g],
+            (((xf.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc = acc + part.astype(I32) * qmul[gi].astype(I32)
+    h = acc.astype(jnp.float32) * w_scale * x_scale
+    if bias is not None:
+        h = h + bias
+    if gelu_scale is not None:
+        h = h.astype(out_dtype).astype(jnp.float32)
+        q = jnp.clip(jnp.round(h / gelu_scale), -128, 127).astype(I32)
+        return int_gelu_ref(q, gelu_scale)
+    h = h.astype(out_dtype)
+    if residual is not None:
+        h = h + residual
+    return h
+
+
+def gated_mlp_w4a8_ref(x_q, x_scale, up4, up_mul, up_scale, gate4, gate_mul,
+                       gate_scale, act="silu", act_scale=None,
+                       out_dtype=jnp.bfloat16):
+    """Unfused composition the fused W4A8 dual-GEMM must match bit-for-bit:
+    two group-scaled W4A8 GEMMs over the same quantized activations ->
+    integer activation of the gate at a static scale -> multiply in the
+    residual-stream dtype (exactly gated_mlp_w8a8_ref past the GEMMs)."""
+    from .int_gelu import gelu_out_scale
+    from .int_silu import silu_out_scale
+    h = gemm_w4a8_ref(x_q, x_scale, up4, up_mul, up_scale,
+                      out_dtype=out_dtype)
+    g = gemm_w4a8_ref(x_q, x_scale, gate4, gate_mul, gate_scale,
+                      out_dtype=out_dtype)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / act_scale),
+                 -128, 127).astype(I32)
+    if act == "silu":
+        a = (int_silu_ref(q, act_scale).astype(jnp.float32)
+             * silu_out_scale(act_scale)).astype(out_dtype)
+    else:
+        a = (int_gelu_ref(q, act_scale).astype(jnp.float32)
+             * gelu_out_scale(act_scale)).astype(out_dtype)
+    return a * h
+
+
 def int_softmax_ref(x, scale, mask=None):
     return inum.i_softmax(x.astype(I32), scale, mask=mask).astype(jnp.int8)
 

@@ -31,6 +31,10 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--w8a8", action="store_true")
+    ap.add_argument("--w4a8", action="store_true",
+                    help="packed-int4 GEMM weights (group-wise scales, "
+                         "in-kernel dequant; attn/mlp projections int4, "
+                         "lm head int8 — see docs/quantization.md)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--token-budget", type=int, default=32,
                     help="per-iteration packed-step token budget "
@@ -62,12 +66,16 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    precision = "w8a8" if args.w8a8 else "bf16"
+    assert not (args.w8a8 and args.w4a8), "--w8a8 and --w4a8 are exclusive"
+    precision = "w4a8" if args.w4a8 else "w8a8" if args.w8a8 else "bf16"
     cfg = get_config(args.arch, precision=precision, reduced=args.reduced)
     set_axis_env(AxisEnv())
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
-    if args.w8a8:
+    if args.w4a8:
+        from ..quant.ptq import DEFAULT_W4_POLICY
+        params = ptq_quantize_params(params, policy=DEFAULT_W4_POLICY)
+    elif args.w8a8:
         params = ptq_quantize_params(params)
     kv_source = None
     if cfg.family == "vlm":

@@ -51,7 +51,7 @@ class ArchConfig:
     tie_embeddings: bool = False
     norm_eps: float = 1e-5
     # execution
-    precision: str = "bf16"        # bf16 | w8a8 (integer inference path)
+    precision: str = "bf16"        # bf16 | w8a8 | w4a8 (integer inference)
     remat: bool = True             # activation checkpointing on layer scan
 
     @property

@@ -116,22 +116,102 @@ def quantize_weight(w: jax.Array) -> dict:
     return {"w_q": w_q, "scale": scale.astype(jnp.float32)}
 
 
+def quantize_weight_w4(w: jax.Array, group: int = 64,
+                       clip_ratio: float = 1.0) -> dict:
+    """PTQ a float [..., in, out] weight to packed int4 with TWO-LEVEL
+    group scales: per-column f32 scale x per-group int8 multiplier.
+
+    Per ``group`` contraction rows the raw symmetric scale is clip_ratio *
+    group-absmax / 7; the per-column maximum of those becomes the f32
+    column scale and each group keeps only an int8 ratio ``qmul`` in
+    [1, 127] against it (VS-Quant-style second-level quantization).
+    Weights are quantized against the EFFECTIVE scale ``scale * qmul`` so
+    the second level adds no extra weight error, and the GEMM's group
+    combine stays in int32 (see ``ops.gemm_w4a8``).  clip_ratio < 1 trades
+    clipping of outliers for finer in-range resolution — searched by
+    ``quant.ptq.calibrate_ptq``.  Returns {"w4": packed int8 [..., in/2,
+    out], "qmul": int8 [..., in/group, out], "scale": f32 [..., out]} —
+    the layout ``ops.gemm_w4a8`` consumes and ``quantize.unpack_int4``
+    restores.
+    """
+    from ..kernels.quantize import pack_int4
+    wf = w.astype(jnp.float32)
+    k = wf.shape[-2]
+    assert k % group == 0 and k % 2 == 0, (k, group)
+    wg = wf.reshape(*wf.shape[:-2], k // group, group, wf.shape[-1])
+    amax = jnp.maximum(jnp.max(jnp.abs(wg), axis=-2, keepdims=True), 1e-8)
+    raw = (clip_ratio * amax) / 7.0                 # (..., K/g, 1, out)
+    col = jnp.max(raw, axis=-3, keepdims=True) / 127.0   # (..., 1, 1, out)
+    qmul = jnp.clip(jnp.round(raw / col), 1, 127)   # (..., K/g, 1, out)
+    eff = col * qmul                                # effective group scale
+    q = jnp.clip(jnp.round(wg / eff), -8, 7).astype(jnp.int8)
+    return {"w4": pack_int4(q.reshape(wf.shape)),
+            "qmul": jnp.squeeze(qmul, -2).astype(jnp.int8),
+            "scale": jnp.squeeze(col, (-3, -2)).astype(jnp.float32)}
+
+
+def linear_w4a8(x: jax.Array, w4: jax.Array, qmul: jax.Array,
+                w_scale: jax.Array, bias: jax.Array | None = None,
+                compute_dtype=DEFAULT_DTYPE,
+                residual: jax.Array | None = None) -> jax.Array:
+    """W4A8: dynamic per-row activation quant -> packed-int4 GEMM with
+    in-kernel nibble unpack + two-level group dequant (and optional
+    residual add) fused into the epilogue.
+
+    w4: packed int8 [in/2, out]; qmul: int8 [in/group, out]; w_scale: f32
+    [out].
+    """
+    x_q, x_scale = ops.quant_rows(x.astype(jnp.float32))
+    return ops.gemm_w4a8(x_q, x_scale, w4, qmul, w_scale, bias=bias,
+                         residual=residual, out_dtype=compute_dtype)
+
+
+def linear_gelu_w4a8(x: jax.Array, w4: jax.Array, qmul: jax.Array,
+                     w_scale: jax.Array,
+                     compute_dtype=DEFAULT_DTYPE) -> jax.Array:
+    """Fused W4A8 up-projection + integer GELU: the W4A8 twin of
+    ``linear_gelu_w8a8`` (same epilogue past the group dequant)."""
+    x_q, x_scale = ops.quant_rows(x.astype(jnp.float32))
+    out_q = ops.gemm_w4a8(x_q, x_scale, w4, qmul, w_scale,
+                          gelu_scale=GELU_INT_SCALE, out_dtype=compute_dtype)
+    from ..kernels.int_gelu import gelu_out_scale
+    return (out_q.astype(jnp.float32)
+            * gelu_out_scale(GELU_INT_SCALE)).astype(compute_dtype)
+
+
+def linear_gated_w4a8(x: jax.Array, up: dict, gate: dict, act: str,
+                      compute_dtype=DEFAULT_DTYPE) -> jax.Array:
+    """Fused W4A8 gated-MLP hidden: ONE activation quant feeds the dual
+    packed-int4 GEMM over a shared A tile — the W4A8 twin of
+    ``linear_gated_w8a8`` (up/gate are {"w4", "qmul", "scale"} leaves)."""
+    x_q, x_scale = ops.quant_rows(x.astype(jnp.float32))
+    act_scale = GELU_INT_SCALE if act == "gelu" else SILU_INT_SCALE
+    return ops.gated_mlp_w4a8(x_q, x_scale, up["w4"], up["qmul"],
+                              up["scale"], gate["w4"], gate["qmul"],
+                              gate["scale"], act=act,
+                              act_scale=act_scale, out_dtype=compute_dtype)
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecMode:
     """Execution-mode switch threaded through the model."""
 
-    precision: str = "bf16"        # bf16 | w8a8
+    precision: str = "bf16"        # bf16 | w8a8 | w4a8
     compute_dtype: object = DEFAULT_DTYPE
 
     @property
     def integer(self) -> bool:
-        return self.precision == "w8a8"
+        # w4a8 params may mix int8 and int4 leaves (calibration keeps
+        # sensitive tensors int8); both ride the integer datapath and
+        # apply_linear dispatches per leaf
+        return self.precision in ("w8a8", "w4a8")
 
 
 def apply_linear(x, p, mode: ExecMode, bias: jax.Array | None = None,
                  use_hint: tuple | None = None,
                  residual: jax.Array | None = None):
-    """Dispatch on the param leaf layout: float array vs PTQ dict {w_q, scale}.
+    """Dispatch on the param leaf layout: float array, PTQ int8 dict
+    {w_q, scale}, or PTQ packed-int4 dict {w4, qmul, scale}.
 
     ``use_hint``: logical spec the weight should have AT USE.  FSDP shards
     the contraction dim in storage; without the hint GSPMD keeps it sharded
@@ -144,9 +224,12 @@ def apply_linear(x, p, mode: ExecMode, bias: jax.Array | None = None,
     residual without a round trip); on the float path it is a plain add.
     """
     if isinstance(p, dict):
-        w = p["w_q"]
+        w = p["w4"] if "w4" in p else p["w_q"]
         if use_hint is not None:
             w = shard_hint(w, *([None] * (w.ndim - len(use_hint)) + list(use_hint)))
+        if "w4" in p:
+            return linear_w4a8(x, w, p["qmul"], p["scale"], bias,
+                               mode.compute_dtype, residual=residual)
         return linear_w8a8(x, w, p["scale"], bias, mode.compute_dtype,
                            residual=residual)
     w = p.astype(mode.compute_dtype)

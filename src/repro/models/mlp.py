@@ -12,7 +12,9 @@ from .layers import (
     activation,
     apply_linear,
     dense_init,
+    linear_gated_w4a8,
     linear_gated_w8a8,
+    linear_gelu_w4a8,
     linear_gelu_w8a8,
 )
 
@@ -42,7 +44,17 @@ def gated_ffn_hidden(params: dict, x: jax.Array, cfg: ArchConfig,
     the f32-accumulating fused kernel on pallas).
     """
     w_in, w_gate = params["w_in"], params["w_gate"]
-    if mode.integer and isinstance(w_in, dict):
+    if (mode.integer and isinstance(w_in, dict) and "w4" in w_in
+            and "w4" in w_gate):
+        up4, gate4 = w_in["w4"], w_gate["w4"]
+        if hint:
+            up4 = shard_hint(up4, None, "tp")
+            gate4 = shard_hint(gate4, None, "tp")
+        return linear_gated_w4a8(
+            x, {"w4": up4, "qmul": w_in["qmul"], "scale": w_in["scale"]},
+            {"w4": gate4, "qmul": w_gate["qmul"], "scale": w_gate["scale"]},
+            cfg.activation, compute_dtype=mode.compute_dtype)
+    if mode.integer and isinstance(w_in, dict) and "w_q" in w_in:
         up_q, gate_q = w_in["w_q"], w_gate["w_q"]
         if hint:
             up_q = shard_hint(up_q, None, "tp")
@@ -68,6 +80,13 @@ def gated_ffn_hidden(params: dict, x: jax.Array, cfg: ArchConfig,
 def mlp(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Array:
     if "w_gate" in params:
         h = gated_ffn_hidden(params, x, cfg, mode, hint=True)
+    elif (cfg.activation == "gelu" and mode.integer
+            and isinstance(params["w_in"], dict) and "w4" in params["w_in"]):
+        # fused up-projection + integer GELU, packed-int4 weight stream
+        w4 = shard_hint(params["w_in"]["w4"], None, "tp")
+        h = linear_gelu_w4a8(x, w4, params["w_in"]["qmul"],
+                             params["w_in"]["scale"],
+                             compute_dtype=mode.compute_dtype)
     elif (cfg.activation == "gelu" and mode.integer
             and isinstance(params["w_in"], dict)):
         # fused up-projection + integer GELU: the GEMM epilogue requantizes

@@ -390,3 +390,153 @@ class TestFusedEpilogues:
             fused = linear_gelu_w8a8(x, w, ws)
             assert (fused == unfused).all(), backend
         assert GELU_INT_SCALE == pytest.approx(8.0 / 127.0)
+
+
+class TestW4A8Blocks:
+    """The packed-int4 families: group-aligned, MXU-legal, overridable."""
+
+    def test_gemm_w4a8_blocks_group_aligned_for_config_shapes(self):
+        from repro.core.costmodel import gemm_w4a8_tile_cost
+        shapes = sorted(set(_config_gemm_shapes(max_archs=3)))
+        for m, k, n in shapes:
+            for g in (32, 64, 128):
+                if k % g:
+                    continue
+                bm, bn, bk = autotune.gemm_w4a8_blocks(m, k, n, g)
+                assert autotune.is_mxu_legal(bm, bn, bk), (m, k, n, g)
+                assert bk % g == 0, (m, k, n, g, bk)
+                assert gemm_w4a8_tile_cost(m, k, n, g, bm, bn, bk) \
+                    < float("inf")
+
+    def test_gatedmlp_w4a8_blocks_group_aligned(self):
+        from repro.core.costmodel import gated_mlp_w4a8_tile_cost
+        for arch in ("codeqwen1.5-7b", "yi-34b"):
+            cfg = get_config(arch)
+            m, k, n = 4 * 128, cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+            for g in (64, 128):
+                bm, bn, bk = autotune.gatedmlp_w4a8_blocks(m, k, n, g)
+                assert autotune.is_mxu_legal(bm, bn, bk), (arch, g)
+                assert bk % g == 0, (arch, g, bk)
+                assert gated_mlp_w4a8_tile_cost(m, k, n, g, bm, bn, bk) \
+                    < float("inf")
+
+    def test_smaller_groups_never_pick_group_straddling_bk(self):
+        """A bk the group does not divide would split a scale group across
+        K blocks; the lattice must treat it as illegal, so the chosen bk is
+        always a multiple of the group even when the plain gemm table's
+        optimum is not."""
+        for g in (32, 64, 128):
+            _, _, bk = autotune.gemm_w4a8_blocks(512, 4096, 4096, g)
+            assert bk % g == 0
+
+    def test_measured_override_both_families(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "measured.json"))
+        autotune.reset_measured_cache()
+        autotune.record("gemm_w4a8/256x512x512/g64/pallas",
+                        (8, 128, 128), 1.0)
+        autotune.record("gatedmlp_w4a8/256x512x512/g64/pallas",
+                        (8, 128, 128), 1.0)
+        autotune.reset_measured_cache()
+        assert autotune.gemm_w4a8_blocks(256, 512, 512, 64) == (8, 128, 128)
+        assert autotune.gatedmlp_w4a8_blocks(256, 512, 512, 64) \
+            == (8, 128, 128)
+        # a different group size is a DIFFERENT key: no false sharing
+        assert autotune.gemm_w4a8_blocks(256, 512, 512, 128) \
+            != autotune.gemm_w4a8_blocks(256, 512, 512, 64) \
+            or autotune.gemm_w4a8_blocks(256, 512, 512, 128)[2] % 128 == 0
+
+
+class TestW4A8Fused:
+    """Acceptance: fused packed-int4 kernels == the unfused unpack ->
+    int8-GEMM -> dequant composition bit-for-bit on BOTH backends."""
+
+    @pytest.fixture(autouse=True)
+    def _interp(self):
+        set_interpret(True)
+        yield
+        ops.set_backend("jnp")
+
+    @staticmethod
+    def _w4_leaf(rng, k, n, g):
+        from repro.kernels.quantize import pack_int4
+        w4 = pack_int4(jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8))
+        qm = jnp.asarray(rng.integers(1, 128, (k // g, n)), jnp.int8)
+        ws = jnp.asarray(np.abs(rng.normal(size=(n,))) * 0.001 + 1e-4,
+                         jnp.float32)
+        return w4, qm, ws
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_w4a8_scaled_epilogues_bit_identical(self, rng, backend):
+        xf = jnp.asarray(rng.normal(size=(11, 96)), jnp.float32)
+        w4, qm, ws = self._w4_leaf(rng, 96, 72, 32)
+        resf = jnp.asarray(rng.normal(size=(11, 72)), jnp.bfloat16)
+        bias = jnp.asarray(rng.normal(size=(72,)), jnp.float32)
+        s0 = 8.0 / 127.0
+        ops.set_backend("jnp")
+        xq, xs = ops.quant_rows(xf)
+        plain_ref = ref.gemm_w4a8_ref(xq, xs, w4, qm, ws)
+        bias_ref = ref.gemm_w4a8_ref(xq, xs, w4, qm, ws, bias=bias)
+        add_ref = ref.gemm_w4a8_ref(xq, xs, w4, qm, ws, residual=resf)
+        gelu_ref = ref.gemm_w4a8_ref(xq, xs, w4, qm, ws, gelu_scale=s0)
+        ops.set_backend(backend)
+        assert (ops.gemm_w4a8(xq, xs, w4, qm, ws) == plain_ref).all()
+        assert (ops.gemm_w4a8(xq, xs, w4, qm, ws, bias=bias)
+                == bias_ref).all()
+        assert (ops.gemm_w4a8(xq, xs, w4, qm, ws, residual=resf)
+                == add_ref).all()
+        assert (ops.gemm_w4a8(xq, xs, w4, qm, ws, gelu_scale=s0)
+                == gelu_ref).all()
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("act", ["silu", "gelu"])
+    def test_gated_w4a8_dual_gemm_bit_identical(self, rng, backend, act):
+        xf = jnp.asarray(rng.normal(size=(11, 96)), jnp.float32)
+        u4, um, us = self._w4_leaf(rng, 96, 72, 32)
+        g4, gm, gs = self._w4_leaf(rng, 96, 72, 32)
+        s0 = 8.0 / 127.0
+        ops.set_backend("jnp")
+        xq, xs = ops.quant_rows(xf)
+        unfused_ref = ref.gated_mlp_w4a8_ref(xq, xs, u4, um, us, g4, gm, gs,
+                                             act=act, act_scale=s0)
+        ops.set_backend(backend)
+        fused = ops.gated_mlp_w4a8(xq, xs, u4, um, us, g4, gm, gs,
+                                   act=act, act_scale=s0)
+        assert (np.asarray(fused, np.float32)
+                == np.asarray(unfused_ref, np.float32)).all()
+
+    def test_model_w4_gated_path_matches_unfused_forward(self, rng):
+        """``linear_gated_w4a8`` == linear_w4a8 x2 -> integer activation ->
+        multiply.  Compared per backend: the dynamic activation quant runs
+        inside both sides, and quant_rows may differ by 1 ulp ACROSS
+        backends (interpret-mode reciprocal-multiply), so fused and unfused
+        must share a backend to be comparable bit-for-bit."""
+        from repro.models.layers import (
+            ExecMode, activation, linear_gated_w4a8, linear_w4a8)
+        mode = ExecMode("w4a8")
+        x = jnp.asarray(rng.normal(size=(5, 64)), jnp.bfloat16)
+        u4, um, us = self._w4_leaf(rng, 64, 128, 32)
+        g4, gm, gs = self._w4_leaf(rng, 64, 128, 32)
+        up = {"w4": u4, "qmul": um, "scale": us}
+        gate = {"w4": g4, "qmul": gm, "scale": gs}
+        for act in ("silu", "gelu"):
+            for backend in ("jnp", "pallas"):
+                ops.set_backend(backend)
+                unfused = (activation(linear_w4a8(x, g4, gm, gs), act, mode)
+                           * linear_w4a8(x, u4, um, us))
+                fused = linear_gated_w4a8(x, up, gate, act)
+                assert (np.asarray(fused, np.float32)
+                        == np.asarray(unfused, np.float32)).all(), (
+                    act, backend)
+
+    def test_model_w4_gelu_path_matches_unfused_forward(self, rng):
+        from repro.models.layers import (
+            ExecMode, activation, linear_gelu_w4a8, linear_w4a8)
+        mode = ExecMode("w4a8")
+        x = jnp.asarray(rng.normal(size=(5, 64)), jnp.bfloat16)
+        w4, qm, ws = self._w4_leaf(rng, 64, 128, 32)
+        for backend in ("jnp", "pallas"):
+            ops.set_backend(backend)
+            unfused = activation(linear_w4a8(x, w4, qm, ws), "gelu", mode)
+            fused = linear_gelu_w4a8(x, w4, qm, ws)
+            assert (fused == unfused).all(), backend
