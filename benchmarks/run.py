@@ -17,14 +17,24 @@ fail) kernel families that are unavailable on the requested backend
 for one backend must not break the other backend's CI gate — the merge
 semantics keep its committed keys either way.
 
+``--history`` additionally appends one JSON line per FULL run to
+``BENCH_history.jsonl`` carrying the gate-relevant keys (decode ladder,
+stream TTFT, spec payoff, serve_tp overlap-vs-barrier) stamped with the
+commit — the across-run trajectory the single merged artifact cannot
+show (it only keeps the latest number per key).  Smoke runs never
+append: their numbers are gates, not measurements.
+
 Usage: PYTHONPATH=src python benchmarks/run.py [--smoke] [--backend jnp]
+                                               [--history]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -168,14 +178,79 @@ def _spec_gate(path: str) -> None:
         print("spec gate: no serve_spec pairs in artifact (fresh checkout)")
 
 
+def _tp_overlap_gate(path: str) -> None:
+    """Overlap-payoff gate: for every TP degree the artifact tracks, the
+    collective/epilogue-overlap variant of the sharded packed step must be
+    at least as fast (us/token) as its barrier twin — the split boundary
+    exists purely to hide the post-attention collective behind the fused
+    epilogue, so the moment it LOSES to the plain gather-then-compute
+    boundary it is dead weight (tp_bench times the twins interleaved on
+    the same emulated mesh, min-of-N, so the margin is load-noise-proof).
+    Same merged-artifact semantics as the other gates.
+    """
+    with open(os.path.join(REPO_ROOT, path)) as f:
+        entries = json.load(f).get("entries", {})
+    marker = "_overlap_"
+    pairs = [(k.replace(marker, "_barrier_"), k) for k in entries
+             if k.startswith("e2e/serve_tp") and marker in k
+             and k.replace(marker, "_barrier_") in entries]
+    for bkey, okey in sorted(pairs):
+        b_us, o_us = entries[bkey]["us"], entries[okey]["us"]
+        ratio = b_us / max(o_us, 1e-9)
+        print(f"tp gate: {okey} {o_us}us vs {bkey} {b_us}us "
+              f"({ratio:.2f}x speedup)")
+        if o_us > b_us:
+            raise SystemExit(
+                f"PERF regression: {okey} ({o_us}us/token) loses to "
+                f"{bkey} ({b_us}us/token) — the split collective no "
+                f"longer hides behind the fused epilogue")
+    if not pairs:
+        print("tp gate: no serve_tp pairs in artifact (fresh checkout)")
+
+
+# key families the perf gates above read — exactly these go to history
+GATE_FAMILIES = ("e2e/decode_", "e2e/serve_stream_", "e2e/serve_spec_",
+                 "e2e/serve_tp")
+
+
+def _append_history(path: str, smoke: bool) -> None:
+    """Append this run's gate-relevant rows as one JSON line (schema 1:
+    ts/commit/rows) to BENCH_history.jsonl.  Full runs only — a smoke run
+    re-gates committed numbers rather than measuring new ones, and a
+    trajectory of repeated baselines is noise."""
+    if smoke:
+        print("history: smoke run, not appending (gates, not measurements)")
+        return
+    with open(os.path.join(REPO_ROOT, path)) as f:
+        entries = json.load(f).get("entries", {})
+    rows = {k: v["us"] for k, v in sorted(entries.items())
+            if k.startswith(GATE_FAMILIES)}
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, check=True, cwd=REPO_ROOT).stdout.strip()
+    except (subprocess.CalledProcessError, OSError):
+        commit = "unknown"
+    line = {"schema": 1, "ts": round(time.time(), 3), "commit": commit,
+            "rows": rows}
+    hist = os.path.join(REPO_ROOT, "BENCH_history.jsonl")
+    with open(hist, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+    print(f"history: appended {len(rows)} gate rows @ {commit} "
+          f"to BENCH_history.jsonl")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="~30 s subset; writes the same BENCH_*.json files")
     ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp")
+    ap.add_argument("--history", action="store_true",
+                    help="append this full run's gate-relevant rows to "
+                         "BENCH_history.jsonl (no-op under --smoke)")
     args = ap.parse_args()
 
-    from benchmarks import cgra_tables, e2e_bench, kernel_bench
+    from benchmarks import cgra_tables, e2e_bench, kernel_bench, tp_bench
 
     # smoke implies non-strict (kernel_bench's default): unavailable kernel
     # families are skipped, not fatal
@@ -188,6 +263,7 @@ def main() -> None:
         e2e_rows += cgra_tables.table_ii()
         e2e_rows += cgra_tables.table_iii_iv()
     e2e_rows += e2e_bench.run(smoke=args.smoke)
+    e2e_rows += tp_bench.run(smoke=args.smoke)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in kernel_rows + e2e_rows:
@@ -200,6 +276,9 @@ def main() -> None:
     _decode_perf_gate("BENCH_e2e.json")
     _stream_ttft_gate("BENCH_e2e.json")
     _spec_gate("BENCH_e2e.json")
+    _tp_overlap_gate("BENCH_e2e.json")
+    if args.history:
+        _append_history("BENCH_e2e.json", smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -31,8 +31,50 @@ REQUIRED = {
     "BENCH_e2e.json": [
         r"^e2e/decode_.*_w4a8$",          # w4a8-vs-w8a8 decode gate rows
         r"^e2e/decode_.*_w8a8$",
+        r"^e2e/serve_tp1_",               # TP overlap-vs-barrier gate rows
+        r"^e2e/serve_tp\d+_barrier_",
+        r"^e2e/serve_tp\d+_overlap_",
     ],
 }
+
+
+def check_history() -> bool:
+    """BENCH_history.jsonl, when present, must parse line-by-line with the
+    schema run.py --history appends (schema/ts/commit/rows with numeric
+    values) — a malformed trajectory is worse than none, every consumer
+    would have to guess which lines to trust."""
+    path = os.path.join(REPO, "BENCH_history.jsonl")
+    if not os.path.exists(path):
+        print("  BENCH_history.jsonl: absent (no full --history runs yet)")
+        return True
+    ok = True
+    with open(path) as f:
+        for i, raw in enumerate(f, 1):
+            if not raw.strip():
+                continue
+            try:
+                line = json.loads(raw)
+            except ValueError:
+                print(f"FAIL: BENCH_history.jsonl line {i} is not JSON",
+                      file=sys.stderr)
+                ok = False
+                continue
+            bad = (line.get("schema") != 1
+                   or not isinstance(line.get("ts"), (int, float))
+                   or not isinstance(line.get("commit"), str)
+                   or not isinstance(line.get("rows"), dict)
+                   or not all(isinstance(v, (int, float))
+                              for v in line["rows"].values()))
+            if bad:
+                print(f"FAIL: BENCH_history.jsonl line {i} violates the "
+                      f"history schema (schema=1, ts, commit, rows:"
+                      f"{{key: us}})", file=sys.stderr)
+                ok = False
+    if ok:
+        with open(path) as f:
+            n = sum(1 for raw in f if raw.strip())
+        print(f"  BENCH_history.jsonl: {n} run lines, schema ok")
+    return ok
 
 
 def main() -> None:
@@ -61,6 +103,7 @@ def main() -> None:
         else:
             print(f"  {name}: {len(cur)} keys, superset of HEAD's "
                   f"{len(prev)}")
+    ok = check_history() and ok
     if not ok:
         raise SystemExit(1)
     print("BENCH schema stable vs HEAD (required families present)")

@@ -14,7 +14,10 @@
 # vanilla greedy with nonzero draft acceptance), a W4A8 serving drain plus
 # a fused-vs-unfused packed-int4 equivalence smoke (in-kernel nibble
 # dequant bit-identical to the widened int8-GEMM composition on the same
-# backend), and a doc link check.
+# backend), a serving tensor-parallel equivalence smoke (tp=1 vs tp=8
+# barrier/overlap on an emulated 8-device mesh: bit-identical token
+# streams with preempt + swap + speculation live under sharding), and a
+# doc link check.
 #
 # The pytest tier runs `-m "not slow"`: the heaviest equivalence-matrix
 # cases (int8/chunked sub-matrices in tests/test_speculative.py) carry
@@ -70,6 +73,9 @@ PYTHONPATH=src python scripts/overload_smoke.py
 
 echo "== self-speculative equivalence smoke (spec_k x dense/paged) =="
 PYTHONPATH=src python scripts/spec_equiv_smoke.py
+
+echo "== TP serving equivalence smoke (tp=8 barrier/overlap, emulated mesh) =="
+PYTHONPATH=src python scripts/tp_equiv_smoke.py
 
 echo "== doc link check =="
 python scripts/check_doc_links.py

@@ -256,6 +256,35 @@ def moe_dispatch_cost(t: int, d: int, ff: int, e: int, k: int,
             + waste + g * TPU_A2A_LATENCY_CYCLES)
 
 
+def tp_boundary_cost(rows: int, d_in: int, d_out: int, tp: int,
+                     overlap: bool, bytes_per_elt: int = 2) -> float:
+    """Estimated cycles for ONE serving-TP row-GEMM boundary (dist/tp.py):
+    the feature-sharded hidden (``rows`` x ``d_in``) entering a replicated
+    (``d_in`` x ``d_out``) projection across ``tp`` shards.
+
+    barrier: tiled all-gather of the hidden ((tp-1)/tp of the payload per
+    shard) followed by the FULL row GEMM on every shard — redundant
+    compute buys zero collective risk.  overlap: the all-to-all that
+    re-shards features->tokens (same payload, same fan-out latency), 1/tp
+    of the GEMM rows per shard (the epilogue consumes peer slices as they
+    arrive), then a tiled all-gather of the (much smaller) output rows.
+    Only the RELATIVE cost matters: it seeds the overlap-vs-barrier choice
+    (kernels.autotune.tp_serving_overlap) until a measurement overrides.
+    """
+    if tp <= 1:
+        return 0.0
+    wire = rows * d_in * bytes_per_elt * (tp - 1) / tp
+    mac = rows * d_in * d_out
+    if not overlap:
+        return (wire / TPU_ICI_BYTES_PER_CYCLE + TPU_A2A_LATENCY_CYCLES
+                + mac / TPU_MACS_PER_CYCLE)
+    out_wire = rows * d_out * bytes_per_elt * (tp - 1) / tp
+    return (wire / TPU_ICI_BYTES_PER_CYCLE
+            + out_wire / TPU_ICI_BYTES_PER_CYCLE
+            + 2 * TPU_A2A_LATENCY_CYCLES
+            + mac / tp / TPU_MACS_PER_CYCLE)
+
+
 def attention_tile_cost(s_q: int, s_kv: int, d: int, bq: int, bk: int,
                         in_bytes: int = 2) -> float:
     """Estimated cycles for one (batch*head) slice of flash attention with

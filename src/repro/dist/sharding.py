@@ -195,3 +195,83 @@ def param_specs(params):
     """PartitionSpec tree mirroring ``params`` (leaves become specs)."""
     return jax.tree_util.tree_map_with_path(
         lambda path, x: _spec_for_path(_path_str(path), x.shape), params)
+
+
+# ---------------------------------------------------------------------------
+# SERVING PartitionSpec rules (shard_map TP; see dist/tp.py)
+# ---------------------------------------------------------------------------
+# Unlike the training rules above, the serving layout is EXACTNESS-first:
+# only column-parallel projections shard (full contraction dim per shard);
+# the row GEMMs (wo/w_out), embeddings, norms, and the lm head stay
+# replicated — their collective boundary is data movement in dist/tp.py,
+# never a partial-sum all-reduce.  No silent demotion: an indivisible dim
+# raises dist.tp.TPConfigError (the engine validates the arch up front, so
+# a spec-level failure means the param tree disagrees with the config).
+
+# projections whose OUTPUT dim splits across shards (heads / d_ff columns)
+_SERVE_COL_PARALLEL = {"wq", "wk", "wv", "bq", "bk", "bv", "w_in", "w_gate"}
+# quantized-dict payload leaves: the sharding rule comes from the PARENT
+# projection name (w_q/w4 (K,N): shard N; qmul (K/g,N): shard N;
+# scale (N,): shard)
+_QUANT_LEAVES = {"w_q", "w4", "qmul", "scale"}
+
+
+def _serve_param_spec(path: str, shape: tuple, tp: int) -> P:
+    from .tp import TPConfigError
+
+    parts = path.split("/")
+    name = parts[-1]
+    proj = parts[-2] if name in _QUANT_LEAVES and len(parts) >= 2 else name
+    if proj not in _SERVE_COL_PARALLEL or not shape:
+        return P(*([None] * len(shape)))
+    if shape[-1] % tp:
+        raise TPConfigError(
+            f"serving TP cannot column-shard {path}: output dim "
+            f"{shape[-1]} % tp={tp} != 0")
+    return P(*([None] * (len(shape) - 1) + ["tp"]))
+
+
+def serve_param_specs(params, tp: int):
+    """PartitionSpec tree for the shard_map-sharded packed serving step.
+
+    Column-parallel projections (qkv + biases, MLP up/gate — including
+    their PTQ int8/int4 payload dicts) shard the output dim on the "tp"
+    mesh axis; everything else (wo/w_out, embed/unembed, norms) is
+    replicated."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _serve_param_spec(_path_str(path), x.shape, tp),
+        params)
+
+
+# state leaves carrying a KV-head axis at dim -2: dense caches
+# (P,B,S,Hkv,D|1) and paged arenas (P,n_pages,ps,Hkv,D|1).  Everything
+# else in the state tree (pos_ids/ppos/pt, recurrent leaves) replicates —
+# page TABLES and position ids are the host scheduler's view and must stay
+# whole on every shard; only page PAYLOADS live shard-local.
+_SERVE_KV_LEAVES = {"k", "v", "k_s", "v_s", "pk", "pv", "pks", "pvs"}
+
+
+def _serve_state_spec(path: str, shape: tuple, tp: int) -> P:
+    from .tp import TPConfigError
+
+    name = path.rsplit("/", 1)[-1]
+    if name not in _SERVE_KV_LEAVES or len(shape) < 2:
+        return P(*([None] * len(shape)))
+    if shape[-2] % tp:
+        raise TPConfigError(
+            f"serving TP cannot head-shard state leaf {path}: Hkv="
+            f"{shape[-2]} % tp={tp} != 0")
+    spec = [None] * len(shape)
+    spec[-2] = "tp"
+    return P(*spec)
+
+
+def serve_state_specs(states, tp: int):
+    """PartitionSpec tree for the serving state tree: KV payloads (dense
+    caches and paged arenas) shard the Hkv axis so every page's payload is
+    local to its head shard; page tables, refcount-backed ``ppos`` maps,
+    and position ids stay replicated (the host-pure ``kv_pool`` policy is
+    untouched — only where the payload bytes live changes)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _serve_state_spec(_path_str(path), x.shape, tp),
+        states)

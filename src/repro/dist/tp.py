@@ -1,0 +1,202 @@
+"""Tensor-parallel SERVING context: exactness-preserving TP boundaries.
+
+Training TP (``dist/sharding.py``) is GSPMD-style: hints + Megatron
+row-parallel partial sums, where the all-reduce changes the f32 reduction
+order and therefore the low bits.  Serving cannot afford that — the
+repo's standing contract is that every scheduling/layout change is
+BIT-IDENTICAL (packed vs tokenwise, paged vs dense, speculative vs
+vanilla) — so the serving TP path sharded via ``shard_map`` uses ONLY
+data-movement collectives and never sums partial products across shards:
+
+  * QKV and MLP up/gate projections are COLUMN-sharded (full contraction
+    dim per shard -> every output element is computed exactly as on one
+    device, there are just fewer of them per shard);
+  * attention is HEAD-sharded (heads are independent: per-head softmax
+    and PV are untouched by the split), with the KV cache / paged arena
+    sharded on the Hkv axis so page payloads stay local to their head
+    shard;
+  * the row GEMMs (``wo``, ``w_out``) keep their FULL weights replicated
+    and run AFTER a collective that rebuilds full rows:
+
+      barrier:  all-gather the feature-sharded hidden, then every shard
+                runs the full GEMM (redundant compute, zero risk);
+      overlap:  all-to-all the hidden from feature-sharded to
+                TOKEN-sharded and run the fused GEMM epilogue on 1/tp of
+                the rows per shard (full contraction dim -> still
+                exact).  The epilogue consumes each shard's slice as it
+                arrives instead of barriering on the full gather — and
+                does 1/tp of the row-GEMM work per shard.  The output
+                STAYS row-sharded (sequence parallel): the residual
+                stream between boundaries lives as each shard's row
+                block, the next norm runs on those local rows, and
+                ``tp_row_unshard`` gathers full rows only in front of
+                the next full-row consumer (QKV / MLP-in / unembed).
+
+  Sequence parallelism here is a BIT-EXACTNESS requirement, not a perf
+  trick: XLA fuses dot + residual-add + rmsnorm into one loop, and that
+  fused f32 row-mean has a different reduction order than a standalone
+  norm reading a collective's output buffer (~1 bf16 ulp — enough to
+  flip a near-tie argmax).  Keeping the norm on the same shard as the
+  row GEMM that feeds it reproduces the tp=1 fusion pattern locally, so
+  the lowering (and every bit) matches; gathering first and norming the
+  gathered buffer does not.
+
+  Per-row activation quantization (``ops.quant_rows``) and per-(token,
+  head) KV quantization make both the token split and the head split
+  exact for the integer paths too.  There is deliberately NO all-reduce
+  and NO reduce-scatter in the sharded step: their absence is asserted
+  from the compiled HLO by ``launch/dryrun.py --tp-serve``.
+
+The context is installed at TRACE time (``with tp_serving(ctx):`` around
+the forward inside ``shard_map``); model code consults it through
+``tp_serving_ctx()`` and stays byte-for-byte on the single-device path
+when no context is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+class TPConfigError(ValueError):
+    """Typed rejection of a (cfg, tp) pair the exact TP path cannot shard."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TPServing:
+    """Active tensor-parallel serving region (inside shard_map)."""
+
+    axis: str = "tp"      # mesh axis name
+    size: int = 1         # shard count
+    overlap: bool = False  # all-to-all/token-sharded row GEMM vs barrier
+
+
+_CTX: list[TPServing | None] = [None]
+
+
+def tp_serving_ctx() -> TPServing | None:
+    return _CTX[0]
+
+
+@contextlib.contextmanager
+def tp_serving(ctx: TPServing):
+    prev = _CTX[0]
+    _CTX[0] = ctx
+    try:
+        yield
+    finally:
+        _CTX[0] = prev
+
+
+# serving blocks the exact TP path knows how to shard: plain/windowed
+# attention + MLP.  MoE (expert dispatch), recurrent state (Mamba/xLSTM),
+# and cross-attention/encoder-decoder states are rejected up front with a
+# typed error instead of failing opaquely inside shard_map.
+_TP_BLOCKS = {"attn", "attn_swa", "shared_attn"}
+
+
+def validate_tp_serving(cfg, tp: int, *, kv_source=None) -> None:
+    """Reject (cfg, tp) pairs the exactness-preserving layout cannot split.
+
+    Head sharding needs n_heads AND n_kv_heads divisible by tp (a partial
+    split would misalign GQA groups across shards); the column-sharded MLP
+    needs d_ff divisible by tp.  No silent demotion: serving TP either
+    shards the layout it promised or refuses loudly.
+    """
+    if tp <= 1:
+        return
+    bad = sorted(set(cfg.block_pattern) - _TP_BLOCKS)
+    if bad or kv_source is not None:
+        what = "cross-attention kv_source" if kv_source is not None else \
+            f"block kinds {bad}"
+        raise TPConfigError(
+            f"serving TP (tp={tp}) supports plain/windowed attention + MLP "
+            f"archs only; {cfg.name} has {what}")
+    for dim_name, dim in (("n_heads", cfg.n_heads),
+                          ("n_kv_heads", cfg.n_kv_heads),
+                          ("d_ff", cfg.d_ff)):
+        if dim % tp:
+            raise TPConfigError(
+                f"serving TP requires {dim_name} % tp == 0 (head/column "
+                f"sharding is exact only for whole heads/columns): "
+                f"{cfg.name} has {dim_name}={dim}, tp={tp}")
+
+
+def _row_block(ctx: TPServing, rows: int) -> int:
+    """Rows per shard when the residual stream is sequence-parallel
+    (padded up so every shard carries the same static block)."""
+    return -(-rows // ctx.size)
+
+
+def tp_row_shard(x: jax.Array) -> jax.Array:
+    """SP entry: replicated rows (B, T, D) -> this shard's row block
+    (1, r_loc, D).  Identity outside an overlap TP region.  Pad rows
+    (rows % tp != 0) sit at the tail of the last shard; every op on the
+    sequence-parallel stream is per-row, so they never touch real rows
+    and ``tp_row_unshard`` slices them off."""
+    ctx = _CTX[0]
+    if ctx is None or ctx.size <= 1 or not ctx.overlap:
+        return x
+    b, t, d = x.shape
+    rows = b * t
+    r_loc = _row_block(ctx, rows)
+    xr = x.reshape(rows, d)
+    if r_loc * ctx.size != rows:
+        xr = jnp.pad(xr, ((0, r_loc * ctx.size - rows), (0, 0)))
+    start = jax.lax.axis_index(ctx.axis) * r_loc
+    return jax.lax.dynamic_slice_in_dim(xr, start, r_loc, 0)[None]
+
+
+def tp_row_unshard(h: jax.Array, b: int, t: int) -> jax.Array:
+    """SP exit: gather the row blocks back to replicated (b, t, D) in
+    front of a full-row consumer (QKV / MLP-in / unembed).  Identity
+    outside an overlap TP region — callers invoke it unconditionally."""
+    ctx = _CTX[0]
+    if ctx is None or ctx.size <= 1 or not ctx.overlap:
+        return h
+    out = jax.lax.all_gather(h[0], ctx.axis, axis=0, tiled=True)
+    return out[:b * t].reshape(b, t, -1)
+
+
+def tp_out_projection(h: jax.Array, residual, apply_out):
+    """The TP boundary in front of a row GEMM (``wo`` / ``w_out``).
+
+    ``h`` is the feature-sharded hidden (B, T, F/tp) inside shard_map;
+    ``apply_out(h_full_rows, residual_rows)`` runs the (fused-epilogue)
+    projection on rows carrying the FULL feature dim.  Outside a TP
+    region this is exactly ``apply_out(h, residual)``.
+
+    Barrier: tiled all-gather on the feature dim, full-row GEMM on every
+    shard (output replicated).  Overlap: tiled all-to-all the (B*T,
+    F/tp) rows from feature-sharded to token-sharded — shard d ends up
+    with rows [d*R/tp, (d+1)*R/tp) carrying full features — and GEMM on
+    1/tp of the rows (the epilogue consumes each peer's slice as it
+    lands).  The result is returned ROW-SHARDED (1, r_loc, D): the
+    residual stream stays sequence-parallel so the following norm fuses
+    with this local GEMM exactly as tp=1 fuses with the full one (see
+    module docstring — that fusion match is what keeps overlap
+    bit-identical), and ``residual`` arrives as the caller's row block.
+    Rows pad up to a multiple of tp; pad rows are row-independent (per-
+    row activation quant included) and are dropped by ``tp_row_unshard``.
+    """
+    ctx = _CTX[0]
+    if ctx is None or ctx.size <= 1:
+        return apply_out(h, residual)
+    tp, ax = ctx.size, ctx.axis
+    if not ctx.overlap:
+        h_full = jax.lax.all_gather(h, ax, axis=h.ndim - 1, tiled=True)
+        return apply_out(h_full, residual)
+    b, t, f_loc = h.shape
+    rows = b * t
+    r_loc = _row_block(ctx, rows)
+    hr = h.reshape(rows, f_loc)
+    if r_loc * tp != rows:
+        hr = jnp.pad(hr, ((0, r_loc * tp - rows), (0, 0)))
+    # peer order along the concat axis is the feature-shard order, so the
+    # tiled all-to-all lands the full feature dim already assembled
+    h_rows = jax.lax.all_to_all(hr, ax, split_axis=0, concat_axis=1,
+                                tiled=True)[None]           # (1, r_loc, F)
+    return apply_out(h_rows, residual)                      # (1, r_loc, D)

@@ -84,6 +84,7 @@ def reset_measured_cache() -> None:
     attention_pv_blocks.cache_clear()
     packed_blocks.cache_clear()
     paged_blocks.cache_clear()
+    tp_serving_overlap.cache_clear()
     decode_blocks.cache_clear()
     rowwise_blocks.cache_clear()
     moe_group_size.cache_clear()
@@ -298,16 +299,28 @@ def attention_pv_blocks(s_q: int, s_kv: int, d: int,
     return best
 
 
+def _tp_suffix(hkv: int, tp: int) -> str:
+    """Sharded-key suffix for the serving attention families: empty at
+    tp=1 so every pre-TP persisted key keeps resolving unchanged; under
+    sharding the kernel sees Hkv/tp heads, a different arithmetic
+    intensity, so the measurement must not alias the unsharded one."""
+    return f"/h{hkv}tp{tp}" if tp > 1 else ""
+
+
 @functools.lru_cache(maxsize=4096)
 def packed_blocks(t_bucket: int, s_kv: int, d: int, arch: str = "",
-                  backend: str = "pallas") -> tuple[int, int]:
+                  backend: str = "pallas", hkv: int = 0,
+                  tp: int = 1) -> tuple[int, int]:
     """(bq, bk) for the packed serving forward's cache-backed attention:
     a ``t_bucket``-row batch mixing prefill chunk tokens and decode tokens
     against an ``s_kv``-slot cache.  Its own key family — keyed on
     (budget bucket, arch) — because neither the pure-prefill table (square
     causal S x S) nor the pure-decode table (single query row) models a
-    short ragged query block against a long position-masked cache."""
-    hit = _hit(f"packed/{t_bucket}x{s_kv}x{d}/{arch}/{backend}")
+    short ragged query block against a long position-masked cache.  Under
+    serving TP the key gains a shard-local ``/h{Hkv}tp{N}`` suffix
+    (``hkv`` is the LOCAL kv-head count the kernel actually sees)."""
+    hit = _hit(f"packed/{t_bucket}x{s_kv}x{d}/{arch}/{backend}"
+               f"{_tp_suffix(hkv, tp)}")
     if hit:
         return hit
     best, best_cost = None, float("inf")
@@ -325,7 +338,8 @@ def packed_blocks(t_bucket: int, s_kv: int, d: int, arch: str = "",
 
 @functools.lru_cache(maxsize=4096)
 def paged_blocks(t_bucket: int, page: int, s_view: int, d: int,
-                 arch: str = "", backend: str = "pallas") -> tuple[int, int]:
+                 arch: str = "", backend: str = "pallas", hkv: int = 0,
+                 tp: int = 1) -> tuple[int, int]:
     """(bq, bk) for the paged serving attention: a ``t_bucket``-row packed
     batch against an ``s_view``-slot gathered page view (``page``-slot
     pages).  Its own key family (``paged/{budget}x{page}x{D}``) — the KV
@@ -333,10 +347,13 @@ def paged_blocks(t_bucket: int, page: int, s_view: int, d: int,
     descriptor overhead (costmodel.paged_attention_tile_cost) shifts the
     optimum toward larger page-aligned KV blocks than the ``packed``
     table would pick.  KV candidates are page-aligned: the kernel gathers
-    whole pages, and a page-straddling block would split a DMA mid-page."""
+    whole pages, and a page-straddling block would split a DMA mid-page.
+    Like ``packed_blocks``, serving TP adds a ``/h{Hkv}tp{N}`` key suffix
+    keyed on the shard-LOCAL kv-head count."""
     q_tiles = _divisor_tiles(t_bucket)
     k_tiles = [k for k in _divisor_tiles(s_view) if k % page == 0] or [page]
-    hit = _hit(f"paged/{t_bucket}x{page}x{d}/{arch}/{backend}")
+    hit = _hit(f"paged/{t_bucket}x{page}x{d}/{arch}/{backend}"
+               f"{_tp_suffix(hkv, tp)}")
     if hit:
         # the persisted key deliberately omits s_view (the family is keyed
         # on the BUCKET shape); a measurement recorded at one view length
@@ -358,6 +375,38 @@ def paged_blocks(t_bucket: int, page: int, s_view: int, d: int,
     if best is None:  # every candidate blew VMEM: take the smallest tiles
         best = (q_tiles[0], k_tiles[0])
     return best
+
+
+@functools.lru_cache(maxsize=4096)
+def tp_serving_overlap(rows: int, d_model: int, d_ff: int, heads_dim: int,
+                       tp: int, backend: str = "pallas") -> str:
+    """``"overlap"`` or ``"barrier"`` for the serving-TP row-GEMM boundary
+    (dist/tp.py): how a step with ``rows`` packed tokens should rebuild
+    full activations in front of the replicated wo/w_out projections.
+
+    Same table-then-measure policy as the tile families, but the decision
+    is a two-way CHOICE, not a block tuple: a measured key
+    (``tpserve/{rows}x{D}x{FF}x{H}/tp{N}/{backend}``) stores 1 for
+    overlap, 0 for barrier; otherwise ``costmodel.tp_boundary_cost`` sums
+    the two boundaries a block crosses per step (attention out: heads
+    dim -> d_model; MLP out: d_ff -> d_model) under each variant and picks
+    the cheaper.  Benchmarks (``e2e/serve_tp*``) measure both variants and
+    record the winner, which then drives ``tp_overlap="auto"`` engines.
+    """
+    if tp <= 1:
+        return "barrier"
+    hit = _hit(f"tpserve/{rows}x{d_model}x{d_ff}x{heads_dim}"
+               f"/tp{tp}/{backend}")
+    if hit:
+        return "overlap" if hit[0] else "barrier"
+
+    def total(overlap: bool) -> float:
+        return (costmodel.tp_boundary_cost(rows, heads_dim, d_model, tp,
+                                           overlap)
+                + costmodel.tp_boundary_cost(rows, d_ff, d_model, tp,
+                                             overlap))
+
+    return "overlap" if total(True) < total(False) else "barrier"
 
 
 @functools.lru_cache(maxsize=4096)

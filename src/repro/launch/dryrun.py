@@ -176,6 +176,78 @@ def run_pipeline_cell(n_stages: int = 4, n_microbatches: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# serving-TP dry run
+# ---------------------------------------------------------------------------
+
+def run_tp_serve_cell(overlap: str, tp: int = 8, save: bool = True) -> dict:
+    """Compile the tp-sharded packed serving step and assert its
+    collective STRUCTURE from the HLO.
+
+    Serving TP's bit-identity contract (dist/tp.py) rests on the sharded
+    program containing ONLY data-movement collectives — no all-reduce and
+    no reduce-scatter anywhere (either would sum partial f32 products in
+    a shard-count-dependent order).  On top of that, each boundary
+    variant has a signature: barrier programs rebuild rows with
+    all-gather only; overlap programs carry the all-to-all token split
+    plus the sequence-parallel row gathers.  This cell is the compile-
+    time proof — scripts/tp_equiv_smoke.py is the runtime one.
+    """
+    import dataclasses
+
+    from ..models import init_params
+    from ..serve import ServeConfig, ServingEngine
+
+    cfg = dataclasses.replace(get_config("codeqwen1.5-7b", reduced=True),
+                              n_heads=8, n_kv_heads=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg,
+                        ServeConfig(batch_lanes=2, max_seq=64,
+                                    token_budget=8, tp=tp,
+                                    tp_overlap=overlap))
+    b = eng.scfg.batch_lanes
+    t = eng._buckets[-1] if eng._buckets else 1
+    t0 = time.time()
+    lowered = eng._step_fn.lower(
+        eng.params, jnp.zeros((b, t), jnp.int32),
+        jnp.full((b, t), -1, jnp.int32), eng.states,
+        jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32), True, 1)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    hlo = hlo_analysis.analyze(compiled.as_text())
+    cc = {k: float(v) for k, v in hlo.coll_counts.items()}
+    # exactness invariant: data movement only, never cross-shard sums
+    assert not cc.get("all-reduce") and not cc.get("reduce-scatter"), \
+        f"serving TP compiled a reducing collective: {cc}"
+    if overlap == "barrier":
+        assert cc.get("all-gather", 0) >= 1, cc
+        assert not cc.get("all-to-all"), \
+            f"barrier variant must not all-to-all: {cc}"
+    else:
+        assert cc.get("all-to-all", 0) >= 1, \
+            f"overlap variant lost its token-split all-to-all: {cc}"
+        assert cc.get("all-gather", 0) >= 1, cc
+    record = {
+        "kind": "tp_serve", "tp": tp, "overlap": overlap,
+        "batch_lanes": b, "bucket": t,
+        "hlo": {
+            "flops_per_device": hlo.flops,
+            "collective_bytes_per_device": hlo.coll_bytes,
+            "collective_counts": cc,
+        },
+        "timing": {"lower_s": round(t_lower, 2),
+                   "compile_s": round(t_compile, 2)},
+    }
+    if save:
+        sub = os.path.join(RESULTS_DIR, "tp_serve")
+        os.makedirs(sub, exist_ok=True)
+        with open(os.path.join(sub, f"serve_tp{tp}_{overlap}.json"),
+                  "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+# ---------------------------------------------------------------------------
 # single-cell dry run
 # ---------------------------------------------------------------------------
 
@@ -303,7 +375,29 @@ def main() -> None:
     ap.add_argument("--pipeline", action="store_true",
                     help="compile the multi-stage GPipe schedule cells "
                          "(2 and 4 stages) instead of the model cells")
+    ap.add_argument("--tp-serve", action="store_true",
+                    help="compile the tp=8 sharded packed serving step "
+                         "(barrier + overlap) and assert the collective "
+                         "structure: no all-reduce/reduce-scatter ever; "
+                         "all-to-all only in the overlap variant")
     args = ap.parse_args()
+
+    if args.tp_serve:
+        n_fail = 0
+        for overlap in ("barrier", "overlap"):
+            tag = f"[tp-serve] tp=8 {overlap}"
+            try:
+                rec = run_tp_serve_cell(overlap)
+                cc = rec["hlo"]["collective_counts"]
+                print(f"OK   {tag}: ag={cc.get('all-gather', 0):.0f} "
+                      f"a2a={cc.get('all-to-all', 0):.0f} "
+                      f"ar={cc.get('all-reduce', 0):.0f} "
+                      f"compile {rec['timing']['compile_s']}s", flush=True)
+            except Exception as e:
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+                n_fail += 1
+        raise SystemExit(1 if n_fail else 0)
 
     if args.pipeline:
         n_fail = 0

@@ -59,6 +59,18 @@ def main() -> None:
                          "(prompt-lookup drafts verified in one packed "
                          "forward; greedy engines only — bit-identical "
                          "output at any k, see docs/serving.md)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="serving tensor parallel: shard the packed step + "
+                         "KV page payloads over N devices (docs/sharding.md; "
+                         "bit-identical to --tp 1; on CPU emulate devices "
+                         "with XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N before launch)")
+    ap.add_argument("--tp-overlap", default="auto",
+                    choices=("auto", "overlap", "barrier"),
+                    help="TP row-GEMM boundary: barrier = all-gather then "
+                         "full GEMM; overlap = all-to-all token split so "
+                         "the fused epilogue consumes shards as they "
+                         "arrive; auto = autotune table-then-measure")
     ap.add_argument("--stream-gap-ms", type=float, default=0.0,
                     help="mean Poisson inter-arrival gap in ms; >0 switches "
                          "from offline drain to the timed run_stream front "
@@ -89,8 +101,13 @@ def main() -> None:
                     prefill_chunk=args.prefill_chunk, seed=args.seed,
                     paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages,
-                    queue_limit=args.queue_limit, spec_k=args.spec_k),
+                    queue_limit=args.queue_limit, spec_k=args.spec_k,
+                    tp=args.tp, tp_overlap=args.tp_overlap),
         kv_source=kv_source)
+    if args.tp > 1:
+        print(f"tensor parallel: tp={args.tp} over "
+              f"{[str(d) for d in engine.tp_mesh.devices.flat]} "
+              f"(boundary={engine.tp_overlap_resolved})")
 
     rng = np.random.default_rng(args.seed)
     reqs = []

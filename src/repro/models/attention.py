@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import shard_hint
+from ..dist.tp import tp_out_projection, tp_serving_ctx
 from ..kernels import autotune, ops
 from .config import ArchConfig
 from .layers import ExecMode, apply_linear, apply_rope, dense_init
@@ -424,7 +425,10 @@ def attention(
 
     q = apply_linear(x, params["wq"], mode, params.get("bq"),
                      use_hint=(None, "tp"))
-    q = q.reshape(b, t, hq, hd)
+    # head counts derive from the PROJECTED widths, not cfg: inside the
+    # serving TP shard_map (dist/tp.py) wq/wk/wv are column-sharded and
+    # each shard carries n_heads/tp whole heads — cfg would over-reshape
+    q = q.reshape(b, t, q.shape[-1] // hd, hd)
     if cross_kv is not None:
         # static cross KV, computed once (precompute_cross_states): the
         # per-decode-step recompute was 87% of vision-90b decode FLOPs
@@ -436,8 +440,8 @@ def attention(
                          use_hint=(None, "tp"))
         v = apply_linear(src, params["wv"], mode, params.get("bv"),
                          use_hint=(None, "tp"))
-        k = k.reshape(b, src.shape[1], hkv, hd)
-        v = v.reshape(b, src.shape[1], hkv, hd)
+        k = k.reshape(b, src.shape[1], k.shape[-1] // hd, hd)
+        v = v.reshape(b, src.shape[1], v.shape[-1] // hd, hd)
     # inside the TP region heads take the model axis (seq gathers back)
     q = shard_hint(q, "dp", None, "tp", None)
     k = shard_hint(k, "dp", None, "tp", None)
@@ -469,9 +473,12 @@ def attention(
                 scale=scale, window=window)[:, None].astype(dtype)
         else:
             kc, vc, kpos = _read_paged(cache, dtype)
+            ctx = tp_serving_ctx()
             bq, _ = autotune.paged_blocks(t, ps, kc.shape[1], hd,
                                           arch=cfg.name,
-                                          backend=ops.backend())
+                                          backend=ops.backend(),
+                                          hkv=kc.shape[2],
+                                          tp=ctx.size if ctx else 1)
             out = _sdpa(q, kc, vc, positions, kpos, scale, dtype,
                         causal=True, window=window, valid=kpos >= 0,
                         chunk=max(bq, 1))
@@ -491,8 +498,11 @@ def attention(
             # one batch): query-block size from the packed autotune family
             # keyed on (budget bucket, arch) — neither the pure-prefill nor
             # the pure-decode table models this shape
+            ctx = tp_serving_ctx()
             bq, _ = autotune.packed_blocks(t, kc.shape[1], hd, arch=cfg.name,
-                                           backend=ops.backend())
+                                           backend=ops.backend(),
+                                           hkv=kc.shape[2],
+                                           tp=ctx.size if ctx else 1)
             out = _sdpa(q, kc, vc, positions, kpos, scale, dtype, causal=True,
                         window=window, valid=kpos >= 0, chunk=max(bq, 1))
     else:
@@ -508,9 +518,15 @@ def attention(
         else:
             out = _sdpa(q, k, v, positions, positions, scale, dtype,
                         causal=True, window=window)
-    out = out.astype(dtype).reshape(b, t, hq * hd)
+    out = out.astype(dtype).reshape(b, t, -1)
     # the residual add rides the out-projection (integer path: fused GEMM
-    # epilogue — the projection output never round-trips before the skip)
-    out = apply_linear(out, params["wo"], mode, use_hint=("tp", None),
-                       residual=residual)
+    # epilogue — the projection output never round-trips before the skip).
+    # Under serving TP this is the collective boundary: ``out`` is
+    # head-sharded, wo is replicated, and dist/tp.py rebuilds full rows
+    # (barrier all-gather, or the all-to-all token split whose row GEMM
+    # consumes each shard's slice as it arrives) before the epilogue.
+    out = tp_out_projection(
+        out, residual,
+        lambda h, res: apply_linear(h, params["wo"], mode,
+                                    use_hint=("tp", None), residual=res))
     return shard_hint(out, "dp", "sp", None), cache

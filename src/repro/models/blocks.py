@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import shard_hint
+from ..dist.tp import tp_row_unshard
 from .attention import attention, init_attn_params, init_cache, init_paged_cache
 from .config import ArchConfig
 from .layers import ExecMode, apply_norm, norm_params
@@ -153,10 +154,15 @@ def block_forward(
     new_state = state
     if kind in ("attn", "attn_swa", "moe", "moe_swa", "shared_attn", "enc"):
         window = cfg.sliding_window if kind in ("attn_swa", "moe_swa") else 0
+        # under overlap serving TP the residual stream x is row-sharded
+        # (sequence parallel, dist/tp.py): norms run on local rows and
+        # tp_row_unshard gathers full rows for the QKV / MLP-in GEMMs
+        # (identity everywhere else)
         h = apply_norm(x, params["norm1"], cfg, mode)
         # SP->TP boundary: gather the bf16 norm output (not the f32 norm
         # intermediate GSPMD would otherwise pick — 2x ICI bytes)
         h = shard_hint(h, "dp", None, None)
+        h = tp_row_unshard(h, *positions.shape)
         # skip connection folds into the out-projection epilogue
         x, kv = attention(params["attn"], h, cfg, mode, positions,
                           cache=None if state is None else state["kv"],
@@ -165,6 +171,7 @@ def block_forward(
             new_state = dict(state, kv=kv)
         h = apply_norm(x, params["norm2"], cfg, mode)
         h = shard_hint(h, "dp", None, None)
+        h = tp_row_unshard(h, *positions.shape)
         if kind in ("moe", "moe_swa"):
             x = x + moe(params["moe"], h, cfg, mode)
         else:

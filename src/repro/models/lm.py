@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import shard_hint
+from ..dist.tp import tp_row_shard, tp_row_unshard
 from .blocks import block_forward, init_block_params, init_block_state
 from .config import ArchConfig
 from .layers import (
@@ -160,6 +161,11 @@ def forward(
     b, t = x.shape[:2]
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    # overlap serving TP: the residual stream runs sequence-parallel
+    # between boundaries (dist/tp.py) — enter the row-sharded domain
+    # here so every block norm fuses with its local producer (identity
+    # outside an overlap TP region)
+    x = tp_row_shard(x)
 
     # pack per-position stacked params/states for the period scan
     xs_params = [params["periods"][i] for i in range(cfg.period)]
@@ -179,6 +185,7 @@ def forward(
         (xs_params, xs_states if xs_states is not None else
          [None] * cfg.period))
     x = apply_norm(x, params["final_norm"], cfg, mode)
+    x = tp_row_unshard(x, b, t)
     if not logits:
         return x, out_states
     unembed = params.get("unembed")

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import shard_hint
+from ..dist.tp import tp_out_projection
 from ..kernels import ops
 from .config import ArchConfig
 from .layers import (
@@ -99,5 +100,11 @@ def mlp(params: dict, x: jax.Array, cfg: ArchConfig, mode: ExecMode) -> jax.Arra
         h = apply_linear(x, params["w_in"], mode, use_hint=(None, "tp"))
         h = activation(h, cfg.activation, mode)
     h = shard_hint(h, "dp", None, "tp")  # hidden: TP region, seq gathered
-    out = apply_linear(h, params["w_out"], mode, use_hint=("tp", None))
+    # serving-TP boundary (dist/tp.py): ``h`` is d_ff-sharded inside the
+    # shard_map region, w_out replicated — the boundary rebuilds full rows
+    # (barrier gather or all-to-all token split) before the epilogue
+    out = tp_out_projection(
+        h, None,
+        lambda hh, _res: apply_linear(hh, params["w_out"], mode,
+                                      use_hint=("tp", None)))
     return shard_hint(out, "dp", "sp", None)

@@ -136,6 +136,14 @@ class ServeConfig:
     #                              step (0 = off; greedy engines only —
     #                              sampled engines silently fall back so
     #                              PRNG streams are untouched)
+    tp: int = 1                  # serving tensor parallel: shard the packed
+    #                              step + KV payloads over a ("tp",) mesh
+    #                              (dist/tp.py, docs/sharding.md); 1 = off
+    tp_overlap: str = "auto"     # row-GEMM boundary: "barrier" (all-gather
+    #                              then full GEMM), "overlap" (all-to-all
+    #                              token split so the epilogue consumes
+    #                              shards as they arrive), or "auto"
+    #                              (kernels.autotune.tp_serving_overlap)
 
 
 def packed_step(params, cfg: ArchConfig, tokens, positions, states,
@@ -348,6 +356,19 @@ class ServingEngine:
         # too but adds no programs: it is a fixed function of the bucket
         # (min(spec_k + 1, bucket)).
         self._step_fn = jax.jit(_packed_masked, static_argnums=(6, 7))
+        self.tp_mesh = None
+        if serve_cfg.tp_overlap not in ("auto", "overlap", "barrier"):
+            # validated even at tp=1: a typo'd boundary choice must not
+            # lie dormant until the config is first run sharded
+            raise ValueError(
+                f"tp_overlap must be 'auto', 'overlap', or 'barrier', "
+                f"got {serve_cfg.tp_overlap!r}")
+        if serve_cfg.tp > 1:
+            # serving tensor parallel (dist/tp.py, docs/sharding.md):
+            # replace the plain jit with a shard_map over the ("tp",) mesh
+            # — same program family, same static_argnums, bit-identical
+            # outputs (the boundary collectives move data, never sum it)
+            self._init_tp(_packed_masked)
         # -- self-speculative decoding (serve/draft.py, docs/serving.md) --
         # Greedy engines only: acceptance compares drafts against the
         # model's own argmax, which a sampled stream does not follow —
@@ -395,6 +416,64 @@ class ServingEngine:
         self._clock = time.monotonic
         self.stats: dict[str, Any] = {}
         self.reset_stats()
+
+    def _init_tp(self, packed_masked) -> None:
+        """Build the tensor-parallel packed step: shard params (column-
+        parallel projections), KV payloads (head axis), and the forward
+        itself over a ("tp",) mesh via shard_map.
+
+        The forward runs UNCHANGED per shard — the trace-time ``tp_serving``
+        context makes ``models.attention``/``models.mlp`` route their out-
+        projections through ``dist.tp.tp_out_projection`` (the only
+        collective boundary), and every fused GEMM/attention kernel sees
+        plain smaller shapes.  Host-side machinery (swap, preempt, COW,
+        speculation rollback) is untouched: the helper jits have no mesh
+        annotations, so GSPMD re-partitions them over whatever sharding
+        the state tree carries, and ``_gather_pages_host``'s device_get
+        assembles full pages from the shards (replication-safe)."""
+        from ..dist.pipeline import shard_map_compat
+        from ..dist.sharding import serve_param_specs, serve_state_specs
+        from ..dist.tp import TPServing, tp_serving, validate_tp_serving
+        from ..kernels import autotune, ops
+        from ..launch.mesh import make_tp_mesh
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        tp = self.scfg.tp
+        validate_tp_serving(self.cfg, tp, kv_source=self.kv_source)
+        choice = self.scfg.tp_overlap   # string validated in __init__
+        if choice == "auto":
+            rows = self.scfg.batch_lanes * (
+                self._buckets[-1] if self._buckets else 1)
+            choice = autotune.tp_serving_overlap(
+                rows, self.cfg.d_model, self.cfg.d_ff,
+                self.cfg.n_heads * self.cfg.d_head, tp,
+                backend=ops.backend())
+        self.tp_overlap_resolved = choice
+        ctx = TPServing(axis="tp", size=tp, overlap=(choice == "overlap"))
+        mesh = self.tp_mesh = make_tp_mesh(tp)
+        pspecs = serve_param_specs(self.params, tp)
+        sspecs = serve_state_specs(self.states, tp)
+        is_p = lambda x: x is None or isinstance(x, P)
+        self.params = jax.device_put(self.params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), pspecs, is_leaf=is_p))
+        self.states = jax.device_put(self.states, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), sspecs, is_leaf=is_p))
+
+        def _sharded(params, tokens, positions, states, lane_mask,
+                     last_idx, commit_all, verify_rows):
+            def inner(params, tokens, positions, states, lane_mask,
+                      last_idx):
+                with tp_serving(ctx):
+                    return packed_masked(params, tokens, positions, states,
+                                         lane_mask, last_idx, commit_all,
+                                         verify_rows)
+            f = shard_map_compat(
+                inner, mesh,
+                in_specs=(pspecs, P(), P(), sspecs, P(), P()),
+                out_specs=(P(), P(), sspecs))
+            return f(params, tokens, positions, states, lane_mask, last_idx)
+
+        self._step_fn = jax.jit(_sharded, static_argnums=(6, 7))
 
     def _resolve_mode(self) -> str:
         """'packed' | 'chunked' | 'tokenwise' (recurrent archs: tokenwise —
@@ -547,8 +626,10 @@ class ServingEngine:
             "swap_out_pages": 0, "swap_in_pages": 0,
             "ttft_ms": [], "tpot_ms": [],
             "slo_ttft_miss": 0, "slo_tpot_miss": 0,
-            # self-speculative decoding (docs/serving.md glossary)
+            # self-speculative decoding (docs/serving.md glossary);
+            # spec_throttled counts proposals halved under pool pressure
             "spec_drafted": 0, "spec_accepted": 0, "spec_steps": 0,
+            "spec_throttled": 0,
         }
         if self._paged:
             # prefix-hit / COW / eviction counters live in pool.stats (one
@@ -825,9 +906,21 @@ class ServingEngine:
         it; empty when speculation is off or the proposer finds nothing.
         Drafting never outruns what the request could still commit: the
         length is capped at the remaining ``max_new`` budget and the
-        lane's sequence room, on top of the bucket cap from __init__."""
+        lane's sequence room, on top of the bucket cap from __init__.
+
+        SWAP-AWARE THROTTLE: while any request sits preempted (the pool
+        is under enough pressure that a lane was swapped out), drafts are
+        halved — rejected speculative rows are pure pad under pressure,
+        and shorter spans shrink each step's page reservation, helping
+        the victim resume sooner.  Draft CONTENT never affects outputs
+        (the verifier guarantees bit-identity for any draft), so the
+        throttle changes speed only; full-length drafting resumes the
+        step after ``preempted`` drains."""
         req = self.lane_request[lane]
         k = self._spec_k
+        if k and self.preempted:
+            k //= 2
+            self.stats["spec_throttled"] += 1
         if k:
             k = min(k, req["max_new"] - len(req["generated"]) - 1,
                     self.scfg.max_seq - 1 - int(self.lane_pos[lane]))
@@ -1108,6 +1201,7 @@ class ServingEngine:
             "slo_tpot_miss": st["slo_tpot_miss"],
             "spec_drafted": st["spec_drafted"],
             "spec_accepted": st["spec_accepted"],
+            "spec_throttled": st["spec_throttled"],
             "spec_accept_rate": round(
                 st["spec_accepted"] / st["spec_drafted"], 4)
             if st["spec_drafted"] else 0.0,

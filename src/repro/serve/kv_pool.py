@@ -20,6 +20,15 @@ allocated, never written, pos_ids forever -1.  Unmapped page-table entries
 point at it, so device gathers need no validity branch: null slots are
 masked by position like any empty slot.
 
+Under serving tensor parallel (dist/tp.py, docs/sharding.md) this module
+is untouched: page PAYLOADS shard on the KV-head axis (each shard holds
+its heads' slice of every page) while the page table, refcounts, radix
+index, and every decision made here stay replicated — page identity is
+global, only where the bytes live is per-shard.  Host swap paths that
+read payloads assemble full pages from the shards (device_get over a
+sharded array is replication-safe), so swap-out/swap-in round trips work
+unchanged at any tp.
+
 Sharing model (vLLM/SGLang-style radix cache at page granularity):
 
 * A lane's prompt pages are inserted into a radix tree when its prefill

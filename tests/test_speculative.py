@@ -207,6 +207,49 @@ class TestSpeculativeExact:
         eng.pool.check()
         assert not eng.pool.table.any()            # drained: zero pages held
 
+    def test_pressure_throttles_draft_length(self):
+        """Swap-aware draft adaptation: while any lane sits preempted for
+        pool pressure, drafts run at HALF their configured spec_k (the
+        spec_throttled counter ticks once per halved proposal) — and
+        because draft content never reaches the committed stream, the
+        throttled drain still matches unconstrained vanilla bit-for-bit
+        with acceptance engaged.  Full-length drafting must resume once
+        the pressure clears: with max spec_k under an empty preempted
+        queue, at least one proposal must reach the un-halved cap."""
+        base = _vanilla(batch_lanes=4, paged=True, int8_kv=True,
+                        token_budget=16)
+        eng = _engine(spec_k=4, batch_lanes=4, paged=True, int8_kv=True,
+                      token_budget=16, pool_pages=8, page_size=8)
+        eng._clock = itertools.count().__next__
+        drafted_lens = []
+        orig = eng._propose
+
+        def spy(lane):
+            d = orig(lane)
+            drafted_lens.append((len(eng.preempted), len(d)))
+            return d
+
+        eng._propose = spy
+        assert _drain(eng) == base
+        st_ = eng.stats
+        assert st_["preemptions"] > 0 and st_["resumes"] > 0
+        assert st_["spec_throttled"] > 0
+        assert st_["spec_drafted"] > 0 and st_["spec_accepted"] > 0
+        # every proposal made under pressure respected the halved cap ...
+        assert all(n <= 2 for p, n in drafted_lens if p > 0)
+        # ... and full-length drafting resumed after the pool cleared
+        assert any(n > 2 for p, n in drafted_lens if p == 0)
+        eng.pool.check()
+        assert not eng.pool.table.any()
+
+    def test_no_throttle_without_pressure(self):
+        """An unpressured speculative drain never ticks spec_throttled —
+        the throttle must not tax the common case."""
+        eng = _engine(spec_k=4, paged=True, page_size=8)
+        _drain(eng)
+        assert eng.stats["spec_throttled"] == 0
+        assert eng.stats["spec_drafted"] > 0
+
     @pytest.mark.slow
     def test_pressure_k8(self):
         base = _vanilla(batch_lanes=4, paged=True, int8_kv=True,
